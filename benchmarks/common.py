@@ -1,0 +1,119 @@
+"""Shared benchmark infrastructure.
+
+Trains one small paper-shaped model (LLaMa-3 family, scaled down) on the
+synthetic Zipf-Markov corpus, cached on disk so every benchmark reuses it.
+CPU container => absolute numbers are small-scale; the *orderings* are the
+reproduction targets (see EXPERIMENTS.md §Quality).
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_config
+from repro.core.rank_controller import RankArtifact, run_ranking_controller
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import transformer as T
+from repro.models.specs import ModelConfig, scaled_down
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+CACHE_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "bench_cache")
+
+VOCAB = 512
+SEQ = 64
+TRAIN_STEPS = 400
+
+
+def bench_config() -> ModelConfig:
+    cfg = scaled_down(get_config("llama3-8b"), d_model=128, head_dim=32,
+                      d_ff=384, vocab=VOCAB, n_periods=4)
+    return cfg.replace(name="bench-llama", scan_layers=False)
+
+
+def corpus() -> SyntheticCorpus:
+    return SyntheticCorpus(VOCAB, seed=0)
+
+
+def get_trained_model(steps: int = TRAIN_STEPS):
+    """(cfg, params, corpus) — trained once, cached."""
+    cfg = bench_config()
+    c = corpus()
+    mgr = CheckpointManager(CACHE_DIR, keep=1)
+    opt = OptConfig(lr=2e-3, warmup_steps=20, total_steps=steps)
+    if mgr.latest_step() == steps:
+        params = T.init_model(jax.random.PRNGKey(0), cfg)
+        params = mgr.restore(params)
+        return cfg, params, c
+    tr = Trainer(cfg, opt, c.batches(32, SEQ), ckpt=None,
+                 compute_dtype=jnp.float32, prefetch=False)
+    tr.run(steps)
+    params = tr.state["params"]
+    mgr.save(steps, params, blocking=True)
+    return cfg, params, c
+
+
+def perplexity(params, cfg, c: SyntheticCorpus, n_batches: int = 6,
+               start: int = 5000) -> float:
+    tot = 0.0
+    for tokens, labels in c.batches(8, SEQ, start=start, n=n_batches):
+        logits, _, _ = T.forward(params, cfg, tokens,
+                                 compute_dtype=jnp.float32)
+        tot += float(T.cross_entropy(logits, labels, cfg.vocab))
+    return math.exp(tot / n_batches)
+
+
+def accuracy(params, cfg, c: SyntheticCorpus, n_batches: int = 4,
+             start: int = 6000) -> float:
+    """Mean zero-shot next-token accuracy over three held-out "tasks"
+    (top-1, top-5, and a shifted-start-distribution split) — the
+    small-scale stand-in for the paper's 7-dataset mean."""
+    accs = []
+    top1 = top5 = n = 0
+    for tokens, labels in c.batches(8, SEQ, start=start, n=n_batches):
+        logits, _, _ = T.forward(params, cfg, tokens,
+                                 compute_dtype=jnp.float32)
+        logits = logits[..., :cfg.vocab]
+        pred = jnp.argmax(logits, -1)
+        top1 += float((pred == labels).mean())
+        top5 += float((jax.lax.top_k(logits, 5)[1]
+                       == labels[..., None]).any(-1).mean())
+        n += 1
+    accs.extend([100 * top1 / n, 100 * top5 / n])
+    c2 = SyntheticCorpus(VOCAB, seed=0)          # same chains
+    c2.start_probs = np.roll(c2.start_probs, 7)  # shifted start split
+    t1 = m = 0
+    for tokens, labels in c2.batches(8, SEQ, start=start, n=n_batches):
+        logits, _, _ = T.forward(params, cfg, tokens,
+                                 compute_dtype=jnp.float32)
+        pred = jnp.argmax(logits[..., :cfg.vocab], -1)
+        t1 += float((pred == labels).mean())
+        m += 1
+    accs.append(100 * t1 / m)
+    return float(np.mean(accs))
+
+
+def rank_artifact(params, cfg, c: SyntheticCorpus, n_samples: int = 32,
+                  want_hessians: bool = False) -> RankArtifact:
+    calib = c.calibration_batches(n_samples, 8, SEQ)
+    return run_ranking_controller(params, cfg, calib,
+                                  want_hessians=want_hessians)
+
+
+def time_call(fn, *args, repeats: int = 5) -> float:
+    """Median wall-clock microseconds per call (post-warmup)."""
+    fn(*args)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))

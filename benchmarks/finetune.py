@@ -1,0 +1,86 @@
+"""E4: LoRA recovery after pruning (Fig 10 / Table VI).
+
+Fine-tunes a LoRA adapter on each granularity's 80%-pruned model and
+tracks loss: projection-pruned models should start lower and recover
+faster (fewer steps to reach the coarse methods' final loss).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (accuracy, get_trained_model, perplexity,
+                               rank_artifact, SEQ)
+from repro.core.lora import init_lora, merge_lora
+from repro.core.prune_controller import run_pruning_controller
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, apply_updates, init_opt
+
+
+def finetune_lora(params, cfg, c, steps: int = 60, rank: int = 8,
+                  eval_every: int = 10):
+    adapters = init_lora(jax.random.PRNGKey(1), params, cfg, rank=rank)
+
+    def loss(ad, tokens, labels):
+        merged = merge_lora(params, cfg, ad, rank=rank)
+        l, _ = T.loss_fn(merged, cfg, tokens, labels,
+                         compute_dtype=jnp.float32)
+        return l
+
+    ocfg = OptConfig(lr=5e-3, warmup_steps=5, total_steps=steps,
+                     weight_decay=0.0)
+    ostate = init_opt(adapters, ocfg)
+    gfn = jax.jit(jax.value_and_grad(loss))
+    curve = []
+    for i, (tokens, labels) in enumerate(
+            c.batches(16, SEQ, start=2000, n=steps)):
+        l, g = gfn(adapters, tokens, labels)
+        adapters, ostate, _ = apply_updates(adapters, g, ostate, ocfg)
+        if i % eval_every == 0 or i == steps - 1:
+            curve.append((i, float(l)))
+    merged = merge_lora(params, cfg, adapters, rank=rank)
+    return merged, curve
+
+
+def run_e4(p: float = 0.8, steps: int = 60):
+    cfg, params, c = get_trained_model()
+    art = rank_artifact(params, cfg, c)
+    out = {}
+    for g in ("global", "layer", "projection"):
+        res = run_pruning_controller(params, cfg, art, p,
+                                     category="unstructured",
+                                     granularity=g)
+        before = {"ppl": perplexity(res.params, res.cfg, c),
+                  "acc": accuracy(res.params, res.cfg, c)}
+        merged, curve = finetune_lora(res.params, res.cfg, c, steps=steps)
+        after = {"ppl": perplexity(merged, res.cfg, c),
+                 "acc": accuracy(merged, res.cfg, c)}
+        out[g] = {"before": before, "after": after, "curve": curve}
+    return out
+
+
+def steps_to_reach(curve, target_loss: float):
+    for step, l in curve:
+        if l <= target_loss:
+            return step
+    return curve[-1][0]
+
+
+def main(fast: bool = True):
+    res = run_e4(steps=40 if fast else 80)
+    print("granularity,ppl_before,ppl_after,acc_before,acc_after,final_loss")
+    for g, r in res.items():
+        print(f"{g},{r['before']['ppl']:.2f},{r['after']['ppl']:.2f},"
+              f"{r['before']['acc']:.2f},{r['after']['acc']:.2f},"
+              f"{r['curve'][-1][1]:.3f}")
+    # recovery speed: steps for projection to reach global's final loss
+    gfinal = res["global"]["curve"][-1][1]
+    sp = steps_to_reach(res["projection"]["curve"], gfinal)
+    print(f"\n# projection reaches global's final loss at step {sp} "
+          f"(global needed {res['global']['curve'][-1][0]})")
+    return res
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,64 @@
+"""E5 + Fig 12: end-to-end overheads and calibration-size sweep.
+
+Fig 11: RC (profile once) + PC (per granularity) wall-clock, plus
+fine-tune-to-quality time from E4's recovery-speed measurements.
+Fig 12: perplexity + pruning time vs calibration sample count.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (get_trained_model, perplexity, rank_artifact,
+                               SEQ)
+from repro.core.prune_controller import run_pruning_controller
+
+
+def run_e5():
+    cfg, params, c = get_trained_model()
+    t0 = time.perf_counter()
+    art = rank_artifact(params, cfg, c)
+    rc_seconds = time.perf_counter() - t0
+    rows = []
+    for g in ("global", "layer", "projection"):
+        res = run_pruning_controller(params, cfg, art, 0.8,
+                                     category="unstructured",
+                                     granularity=g)
+        rows.append({"granularity": g, "rc_s": rc_seconds,
+                     "pc_s": res.prune_seconds,
+                     "ppl": perplexity(res.params, res.cfg, c)})
+    return rows
+
+
+def run_fig12(sample_sizes=(1, 4, 16, 64)):
+    cfg, params, c = get_trained_model()
+    rows = []
+    for n in sample_sizes:
+        t0 = time.perf_counter()
+        art = rank_artifact(params, cfg, c, n_samples=n)
+        res = run_pruning_controller(params, cfg, art, 0.8,
+                                     category="unstructured",
+                                     granularity="projection")
+        dt = time.perf_counter() - t0
+        rows.append({"samples": n, "seconds": dt,
+                     "ppl": perplexity(res.params, res.cfg, c)})
+    return rows
+
+
+def main(fast: bool = True):
+    rows = run_e5()
+    print("granularity,rc_s,pc_s,ppl")
+    for r in rows:
+        print(f"{r['granularity']},{r['rc_s']:.2f},{r['pc_s']:.2f},"
+              f"{r['ppl']:.2f}")
+    sizes = (4, 32) if fast else (1, 4, 16, 64)
+    rows12 = run_fig12(sizes)
+    print("\nsamples,seconds,ppl")
+    for r in rows12:
+        print(f"{r['samples']},{r['seconds']:.2f},{r['ppl']:.2f}")
+    return rows, rows12
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,65 @@
+"""E1 + E2: projection vs layer vs global pruning quality.
+
+Reproduces (at small scale) Table IV / Fig 7 (perplexity + accuracy vs
+sparsity per granularity) and Fig 8 (per-layer / per-projection pruning
+target distributions).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (accuracy, get_trained_model, perplexity,
+                               rank_artifact)
+from repro.core.planner import plan
+from repro.core.prune_controller import run_pruning_controller
+
+SPARSITIES = (0.2, 0.4, 0.6, 0.8)
+GRANULARITIES = ("global", "layer", "projection")
+
+
+def run_e1(sparsities=SPARSITIES, selector: str = "sparsegpt"):
+    cfg, params, c = get_trained_model()
+    art = rank_artifact(params, cfg, c,
+                        want_hessians=(selector == "sparsegpt"))
+    base_ppl = perplexity(params, cfg, c)
+    base_acc = accuracy(params, cfg, c)
+    rows = [{"granularity": "-", "p": 0.0, "ppl": base_ppl,
+             "acc": base_acc}]
+    for g in GRANULARITIES:
+        for p in sparsities:
+            res = run_pruning_controller(params, cfg, art, p,
+                                         category="unstructured",
+                                         granularity=g, selector=selector,
+                                         )
+            rows.append({"granularity": g, "p": p,
+                         "ppl": perplexity(res.params, res.cfg, c),
+                         "acc": accuracy(res.params, res.cfg, c)})
+    return rows
+
+
+def run_e2(p: float = 0.8):
+    """Per-projection target distribution at 80% (Fig 8)."""
+    cfg, params, c = get_trained_model()
+    art = rank_artifact(params, cfg, c)
+    out = {}
+    for g in GRANULARITIES:
+        out[g] = plan(art.rank, p, granularity=g)
+    spreads = {g: (min(t.values()), max(t.values()))
+               for g, t in out.items()}
+    return out, spreads
+
+
+def main(fast: bool = True):
+    rows = run_e1(sparsities=(0.4, 0.8) if fast else SPARSITIES)
+    print("granularity,p,ppl,acc")
+    for r in rows:
+        print(f"{r['granularity']},{r['p']},{r['ppl']:.2f},{r['acc']:.2f}")
+    targets, spreads = run_e2()
+    print("\n# E2 target ranges at p=0.8 (min..max per granularity):")
+    for g, (lo, hi) in spreads.items():
+        print(f"{g}: {lo:.3f}..{hi:.3f}")
+    return rows, spreads
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,134 @@
+"""§Roofline: three-term analysis per (arch x shape) from the dry-run.
+
+  compute term    = HLO_FLOPs(per chip) / peak_FLOP/s
+  memory term     = HLO_bytes(per chip) / HBM_bw
+  collective term = collective_bytes(per chip) / link_bw
+
+MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (prefill/decode); the
+MODEL/HLO ratio exposes remat + padding + replication waste.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.analysis import TPU_V5E
+from repro.models import transformer as T
+from repro.models.specs import MoESpec
+
+N_CHIPS = 256
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def active_params(cfg) -> float:
+    """Matmul-active parameters per token (MoE experts scaled by top_k/E;
+    embedding gather excluded, LM head included)."""
+    shapes = jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg, jnp.bfloat16))
+    total = 0.0
+    if cfg.scan_layers:
+        block_specs = list(enumerate(cfg.pattern))   # leaves carry period axis
+        blocks = shapes["blocks"]
+    else:
+        block_specs = list(enumerate(cfg.layers()))
+        blocks = shapes["blocks"]
+    for i, spec in block_specs:
+        for path_name, sub in blocks[i].items():
+            for kname, leaf in _leaves_with_names(sub):
+                size = math.prod(leaf.shape)
+                if path_name == "moe" and isinstance(spec.ffn, MoESpec) \
+                        and kname in ("up", "gate", "down"):
+                    size *= spec.ffn.top_k / spec.ffn.n_experts
+                total += size
+    # LM head (tied or not): one d x V matmul per token
+    total += cfg.d_model * cfg.padded_vocab
+    return total
+
+
+def _leaves_with_names(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _leaves_with_names(v, k)
+    else:
+        yield prefix, tree
+
+
+def model_flops(cfg, shape) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n * tokens
+    tokens = shape.batch * 1
+    return 2.0 * n * tokens
+
+
+def analyse(path: str) -> dict:
+    with open(path) as f:
+        res = json.load(f)
+    if res.get("skipped"):
+        return res
+    cfg = get_config(res["arch"])
+    shape = SHAPES[res["shape"]]
+    cost = res["cost"]
+    hw = TPU_V5E
+    compute_s = cost["flops"] / hw["peak_flops_bf16"]
+    memory_s = cost["bytes_accessed"] / hw["hbm_bw"]
+    collective_s = cost["collective_bytes"] / hw["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / N_CHIPS
+    step_s = max(terms.values())
+    ideal_s = mf / hw["peak_flops_bf16"]
+    return {
+        "arch": res["arch"], "shape": res["shape"], "mesh": res["mesh"],
+        **terms, "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops_per_chip": mf,
+        "useful_ratio": mf / cost["flops"] if cost["flops"] else 0.0,
+        "roofline_frac": ideal_s / step_s if step_s else 0.0,
+        "hbm_gib": res["memory"]["peak_memory_in_bytes"] / 2 ** 30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(RESULTS, "dryrun"))
+    ap.add_argument("--csv", default=os.path.join(RESULTS, "roofline.csv"))
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*__single.json"))):
+        rows.append(analyse(path))
+    hdr = ("arch,shape,compute_s,memory_s,collective_s,bottleneck,"
+           "useful_ratio,roofline_frac,peak_hbm_gib")
+    lines = [hdr]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"{r['arch']},{r['shape']},skipped:"
+                         f"{r['reason'][:40]},,,,,,")
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['compute_s']:.4e},"
+            f"{r['memory_s']:.4e},{r['collective_s']:.4e},"
+            f"{r['bottleneck']},{r['useful_ratio']:.3f},"
+            f"{r['roofline_frac']:.3f},{r['hbm_gib']:.2f}")
+    out = "\n".join(lines)
+    print(out)
+    with open(args.csv, "w") as f:
+        f.write(out + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

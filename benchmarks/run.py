@@ -1,0 +1,124 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark unit),
+followed by each benchmark's detailed table. ``--full`` widens sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import io
+import sys
+import time
+from contextlib import redirect_stdout
+
+
+def _timed(name: str, fn, *args, **kw):
+    buf = io.StringIO()
+    t0 = time.perf_counter()
+    with redirect_stdout(buf):
+        result = fn(*args, **kw)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    return name, dt_us, result, buf.getvalue()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sparsity sweeps (slower)")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args, _ = ap.parse_known_args()
+    fast = not args.full
+
+    from benchmarks import (composite, finetune, kernel_bench, overheads,
+                            quality, quant_compare)
+
+    sections = []
+    rows = []
+
+    for name, fn in [
+        ("table4_fig7_quality_e1_e2", lambda: quality.main(fast)),
+        ("table5_fig9_composite_e3", lambda: composite.main(fast)),
+        ("fig10_table6_finetune_e4", lambda: finetune.main(fast)),
+        ("fig11_fig12_overheads_e5", lambda: overheads.main(fast)),
+        ("table13_quant_compare", lambda: quant_compare.main(fast)),
+        ("kernel_bench", lambda: kernel_bench.main(fast)),
+    ]:
+        nm, us, result, text = _timed(name, fn)
+        derived = _derive(name, result)
+        rows.append((nm, us, derived))
+        sections.append((nm, text))
+
+    if not args.skip_roofline:
+        try:
+            from benchmarks import roofline
+            nm, us, result, text = _timed("roofline_from_dryrun",
+                                          roofline.main)
+            ok = [r for r in result if not r.get("skipped")]
+            derived = (f"cells={len(ok)}"
+                       f";median_roofline_frac="
+                       f"{_median([r['roofline_frac'] for r in ok]):.3f}"
+                       if ok else "no-dryrun-results")
+            rows.append((nm, us, derived))
+            sections.append((nm, text))
+        except Exception as e:                        # noqa: BLE001
+            rows.append(("roofline_from_dryrun", 0.0, f"error:{e!r}"))
+
+    print("name,us_per_call,derived")
+    for nm, us, derived in rows:
+        print(f"{nm},{us:.0f},{derived}")
+    for nm, text in sections:
+        print(f"\n===== {nm} =====")
+        print(text.rstrip())
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2] if xs else 0.0
+
+
+def _derive(name: str, result) -> str:
+    try:
+        if name.startswith("table4"):
+            rows, spreads = result
+            proj = [r for r in rows if r["granularity"] == "projection"]
+            glob = [r for r in rows if r["granularity"] == "global"]
+            p80p = min(proj, key=lambda r: abs(r["p"] - 0.8))
+            p80g = min(glob, key=lambda r: abs(r["p"] - 0.8))
+            return (f"ppl_proj@0.8={p80p['ppl']:.1f}"
+                    f";ppl_global@0.8={p80g['ppl']:.1f}"
+                    f";ppl_reduction={(1 - p80p['ppl'] / p80g['ppl']) * 100:.1f}%")
+        if name.startswith("table5"):
+            rows = result
+            uns = [r for r in rows if r["category"] == "unstructured"]
+            stc = [r for r in rows if r["category"] == "structured"]
+            cmp_ = [r for r in rows if r["category"] == "composite"]
+            hi = max(r["p"] for r in uns)
+            u = next(r for r in uns if r["p"] == hi)
+            s = next(r for r in stc if r["p"] == hi)
+            m = next(r for r in cmp_ if r["p"] == hi)
+            return (f"latency_cut_vs_unstructured="
+                    f"{(1 - m['latency_us'] / u['latency_us']) * 100:.0f}%"
+                    f";ppl_vs_structured={s['ppl'] / m['ppl']:.1f}x")
+        if name.startswith("fig10"):
+            g = result["global"]["after"]["ppl"]
+            p = result["projection"]["after"]["ppl"]
+            return f"ppl_after_ft_proj={p:.1f};global={g:.1f}"
+        if name.startswith("fig11"):
+            rows, rows12 = result
+            return f"rc_s={rows[0]['rc_s']:.1f}"
+        if name.startswith("table13"):
+            rows = result
+            m = [r for r in rows if r["method"] == "mosaic"]
+            return f"mosaic_pts={len(m)}"
+        if name == "kernel_bench":
+            bs, at = result
+            return (f"block_skip={bs['skip_frac']:.2f}"
+                    f";flash_MiB_avoided="
+                    f"{at['score_matrix_mib_avoided']:.0f}")
+    except Exception as e:                            # noqa: BLE001
+        return f"derive-error:{e!r}"
+    return "-"
+
+
+if __name__ == "__main__":
+    main()

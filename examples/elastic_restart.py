@@ -1,0 +1,63 @@
+"""Fault-tolerance / elasticity demo: train, checkpoint, simulate a
+preemption, restart on a *different* device mesh (fleet shrank/grew), and
+continue — losses line up across the restart.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+(re-executes itself with 8 fake devices)
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+BODY = r"""
+import os, json, tempfile
+import jax, jax.numpy as jnp
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import SyntheticCorpus
+from repro.distributed.elastic import make_elastic_mesh, reshard_state
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+cfg = get_smoke_config("llama3-8b", d_model=128, d_ff=384, vocab=512,
+                       n_periods=2).replace(scan_layers=False)
+corpus = SyntheticCorpus(cfg.vocab, seed=0)
+opt = OptConfig(lr=2e-3, warmup_steps=10, total_steps=100)
+d = tempfile.mkdtemp()
+ckpt = CheckpointManager(d, keep=2)
+
+# phase 1: train 30 steps, checkpoint, then 'preemption'
+t1 = Trainer(cfg, opt, corpus.batches(16, 64), ckpt=ckpt, ckpt_every=10,
+             compute_dtype=jnp.float32, prefetch=False)
+r1 = t1.run(30)
+t1.preemption.trigger()
+r1b = t1.run(10)          # exits immediately with a final checkpoint
+print(f"phase1: {r1.steps_run} steps, preempted={r1b.preempted}, "
+      f"ckpts={ckpt.all_steps()}")
+
+# phase 2: 'new fleet' — restore onto an elastic mesh and continue
+mesh = make_elastic_mesh(8, target_tp=2)
+t2 = Trainer(cfg, opt, corpus.batches(16, 64, start=t1.step), ckpt=ckpt,
+             ckpt_every=10, compute_dtype=jnp.float32, prefetch=False)
+t2.state = reshard_state(t2.state, mesh, cfg)
+r2 = t2.run(20)
+print(f"phase2 on mesh {dict(mesh.shape)}: resumed at {t2.step - 20}, "
+      f"losses {r2.losses[0]:.3f} -> {r2.losses[-1]:.3f}")
+assert r2.losses[0] < r1.losses[0], "restart lost progress!"
+print("ELASTIC RESTART OK")
+"""
+
+
+def main():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    out = subprocess.run([sys.executable, "-c", BODY], env=env)
+    raise SystemExit(out.returncode)
+
+
+if __name__ == "__main__":
+    main()

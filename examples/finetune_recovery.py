@@ -1,0 +1,68 @@
+"""E4 live: LoRA recovery of an 80%-pruned model (Fig 10 analogue).
+
+  PYTHONPATH=src python examples/finetune_recovery.py
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import init_lora, merge_lora
+from repro.core.prune_controller import run_pruning_controller
+from repro.core.rank_controller import run_ranking_controller
+from repro.data.pipeline import SyntheticCorpus
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, apply_updates, init_opt
+from repro.train.trainer import Trainer
+
+
+def main():
+    cfg = get_smoke_config("llama3-8b", d_model=128, d_ff=384, vocab=512,
+                           n_periods=4).replace(scan_layers=False)
+    corpus = SyntheticCorpus(cfg.vocab, seed=0)
+    trainer = Trainer(cfg, OptConfig(lr=2e-3, warmup_steps=20,
+                                     total_steps=200),
+                      corpus.batches(32, 64), compute_dtype=jnp.float32,
+                      prefetch=False)
+    trainer.run(200)
+    params = trainer.state["params"]
+    art = run_ranking_controller(params, cfg,
+                                 corpus.calibration_batches(16, 8, 64))
+    res = run_pruning_controller(params, cfg, art, 0.8,
+                                 category="unstructured")
+
+    def ppl(p_, c_):
+        tot = 0.0
+        for tok, lab in corpus.batches(8, 64, start=900, n=4):
+            lo, _, _ = T.forward(p_, c_, tok, compute_dtype=jnp.float32)
+            tot += float(T.cross_entropy(lo, lab, c_.vocab))
+        return math.exp(tot / 4)
+
+    print(f"dense ppl {ppl(params, cfg):.1f}; "
+          f"80%-pruned ppl {ppl(res.params, res.cfg):.1f}")
+
+    rank = 8
+    adapters = init_lora(jax.random.PRNGKey(1), res.params, res.cfg, rank)
+
+    def loss(ad, tok, lab):
+        merged = merge_lora(res.params, res.cfg, ad, rank=rank)
+        l, _ = T.loss_fn(merged, res.cfg, tok, lab,
+                         compute_dtype=jnp.float32)
+        return l
+
+    ocfg = OptConfig(lr=5e-3, warmup_steps=5, total_steps=100,
+                     weight_decay=0.0)
+    ostate = init_opt(adapters, ocfg)
+    gfn = jax.jit(jax.value_and_grad(loss))
+    for i, (tok, lab) in enumerate(corpus.batches(16, 64, start=300, n=100)):
+        l, g = gfn(adapters, tok, lab)
+        adapters, ostate, _ = apply_updates(adapters, g, ostate, ocfg)
+        if i % 20 == 0:
+            print(f"lora step {i:3d} loss {float(l):.3f}")
+    merged = merge_lora(res.params, res.cfg, adapters, rank=rank)
+    print(f"recovered ppl {ppl(merged, res.cfg):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Serve-path comparison across the three Mosaic pruning categories:
+model size, CPU forward latency, perplexity — the E3 tradeoff, live.
+
+  PYTHONPATH=src python examples/prune_and_serve.py
+"""
+import functools
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.prune_controller import run_pruning_controller
+from repro.core.rank_controller import run_ranking_controller
+from repro.common.tree import param_bytes, param_count
+from repro.data.pipeline import SyntheticCorpus
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    cfg = get_smoke_config("llama3-8b", d_model=128, d_ff=384, vocab=512,
+                           n_periods=4).replace(scan_layers=False)
+    corpus = SyntheticCorpus(cfg.vocab, seed=0)
+    trainer = Trainer(cfg, OptConfig(lr=2e-3, warmup_steps=20,
+                                     total_steps=200),
+                      corpus.batches(32, 64), compute_dtype=jnp.float32,
+                      prefetch=False)
+    trainer.run(200)
+    params = trainer.state["params"]
+    art = run_ranking_controller(params, cfg,
+                                 corpus.calibration_batches(16, 8, 64))
+    tokens, labels = next(corpus.batches(8, 64, start=900))
+
+    def profile(p_, c_, name):
+        f = jax.jit(lambda pr, t: T.forward(pr, c_, t,
+                                            compute_dtype=jnp.float32)[0])
+        f(p_, tokens)                       # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(f(p_, tokens))
+        lat = (time.perf_counter() - t0) / 5 * 1e3
+        lo, _, _ = T.forward(p_, c_, tokens, compute_dtype=jnp.float32)
+        ppl = math.exp(float(T.cross_entropy(lo, labels, c_.vocab)))
+        print(f"{name:14s} params={param_count(p_):9d} "
+              f"bytes={param_bytes(p_):10d} latency={lat:7.1f}ms "
+              f"ppl={ppl:8.1f}")
+
+    profile(params, cfg, "dense")
+    for cat in ("unstructured", "composite", "structured"):
+        res = run_pruning_controller(params, cfg, art, 0.6, category=cat,
+                                     align_channels=8)
+        profile(res.params, res.cfg, cat)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Pytree path utilities used across the framework.
+
+Params are nested dicts (and lists for per-layer blocks). A *path* is a
+tuple of keys, e.g. ``('blocks', 3, 'mixer', 'q')``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+Path = tuple
+PyTree = Any
+
+
+def tree_get(tree: PyTree, path: Path) -> Any:
+    node = tree
+    for key in path:
+        node = node[key]
+    return node
+
+
+def tree_set(tree: PyTree, path: Path, value: Any) -> PyTree:
+    """Functionally set ``value`` at ``path``, copying containers on the way."""
+    if not path:
+        return value
+    key, rest = path[0], path[1:]
+    if isinstance(tree, dict):
+        new = dict(tree)
+        new[key] = tree_set(tree[key], rest, value)
+        return new
+    if isinstance(tree, list):
+        new_l = list(tree)
+        new_l[key] = tree_set(tree[key], rest, value)
+        return new_l
+    if isinstance(tree, tuple):
+        new_t = list(tree)
+        new_t[key] = tree_set(tree[key], rest, value)
+        return tuple(new_t)
+    raise TypeError(f"Cannot set path {path!r} in {type(tree)}")
+
+
+def tree_update(tree: PyTree, updates: dict[Path, Any]) -> PyTree:
+    for path, value in updates.items():
+        tree = tree_set(tree, path, value)
+    return tree
+
+
+def iter_paths(tree: PyTree, prefix: Path = ()) -> Iterator[tuple[Path, Any]]:
+    """Yield (path, leaf) for every array leaf."""
+    if isinstance(tree, dict):
+        for key in sorted(tree):
+            yield from iter_paths(tree[key], prefix + (key,))
+    elif isinstance(tree, (list, tuple)):
+        for i, sub in enumerate(tree):
+            yield from iter_paths(sub, prefix + (i,))
+    elif tree is None:
+        return
+    else:
+        yield prefix, tree
+
+
+def tree_map_with_path(fn: Callable[[Path, Any], Any], tree: PyTree,
+                       prefix: Path = ()) -> PyTree:
+    if isinstance(tree, dict):
+        return {k: tree_map_with_path(fn, v, prefix + (k,)) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [tree_map_with_path(fn, v, prefix + (i,)) for i, v in enumerate(tree)]
+    if isinstance(tree, tuple):
+        return tuple(tree_map_with_path(fn, v, prefix + (i,)) for i, v in enumerate(tree))
+    if tree is None:
+        return None
+    return fn(prefix, tree)
+
+
+def param_count(tree: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree: PyTree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def cast_tree(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

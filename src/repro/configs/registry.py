@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.specs import ModelConfig, scaled_down
+
+ARCHS = {
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "llama4-scout-17b-16e": "repro.configs.llama4_scout_17b_16e",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "nemotron-4-340b": "repro.configs.nemotron_4_340b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+    # the paper's own model family
+    "llama3-8b": "repro.configs.llama3_8b",
+}
+
+ASSIGNED = [k for k in ARCHS if k != "llama3-8b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choices: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).config()
+
+
+def get_smoke_config(name: str, **kw) -> ModelConfig:
+    return scaled_down(get_config(name), **kw)
+
+
+def list_archs() -> list:
+    return sorted(ARCHS)

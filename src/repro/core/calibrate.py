@@ -1,0 +1,65 @@
+"""Calibration pass: per-projection input-activation statistics.
+
+Runs the calibration set through the model once and accumulates, for every
+projection input, either the per-channel l2 norm (Eq. 5's ``||A_n||_2``) or
+the full Gram matrix ``X^T X`` (SparseGPT Hessian). This is the Mosaic RC's
+"LLM Profiler" + "Activation Processor" (Fig. 5, steps 2-4).
+
+Works under jit/pjit: the tap collector is drained within the trace, so the
+same code calibrates a sharded 340B model on a pod (DESIGN.md §3.3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import taps
+from repro.models import transformer as T
+from repro.models.specs import ModelConfig
+from repro.core.registry import tap_sequence
+
+
+def _forward_stats(params, cfg: ModelConfig, tokens, mode: str):
+    """One batch -> {(layer, tap_name): stat}."""
+    with taps.collecting(mode) as collected:
+        T.forward(params, cfg, tokens, compute_dtype=jnp.float32)
+    out = {}
+    idx = 0
+    for i, spec in enumerate(cfg.layers()):
+        for name in tap_sequence(spec):
+            got_name, stat = collected[idx]
+            assert got_name == name, f"tap mismatch {got_name} != {name}"
+            out[(i, name)] = stat
+            idx += 1
+    assert idx == len(collected), "unconsumed taps"
+    return out
+
+
+def calibrate(params, cfg: ModelConfig, batches: Iterable[jax.Array],
+              mode: str = "ssq") -> dict:
+    """Accumulate activation stats over calibration batches.
+
+    mode='ssq'    -> {(layer, tap): per-channel sum of squares}
+    mode='hessian'-> {(layer, tap): X^T X Gram matrix}
+    Returns (stats, n_tokens).
+    """
+    step = jax.jit(functools.partial(_forward_stats, cfg=cfg, mode=mode),
+                   static_argnames=())
+    total = None
+    n_tokens = 0
+    for tokens in batches:
+        stats = step(params, tokens=tokens)
+        n_tokens += tokens.size
+        if total is None:
+            total = stats
+        else:
+            total = jax.tree.map(jnp.add, total, stats)
+    return total, n_tokens
+
+
+def activation_norms(stats: dict) -> dict:
+    """ssq stats -> per-channel l2 norms (the ||A||_2 of Eq. 5)."""
+    return {k: jnp.sqrt(v) for k, v in stats.items()}

@@ -1,0 +1,65 @@
+"""LoRA adapters for post-pruning recovery fine-tuning (E4, Fig. 10).
+
+Adapters attach to every 2-D+ projection; only A/B train. ``merge`` folds
+the adapter into the base weights for deployment (the paper's 84 MB adapter
+merged at runtime).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_get, tree_set
+from repro.core.registry import projections
+from repro.models.specs import ModelConfig
+
+
+def init_lora(key: jax.Array, params, cfg: ModelConfig, rank: int = 8,
+              alpha: float = 16.0) -> dict:
+    """{(layer, name): {'a': (in, r), 'b': (r, out)}} per projection."""
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    adapters = {}
+    for proj in projections(cfg):
+        w = tree_get(params, proj.path)
+        shape = w.shape
+        if proj.expert_axis is not None:
+            e, cin, cout = shape
+            a_shape, b_shape = (e, cin, rank), (e, rank, cout)
+        else:
+            cin = 1
+            for ax in proj.in_axes:
+                cin *= shape[ax]
+            cout = int(jnp.prod(jnp.asarray(shape))) // cin
+            a_shape, b_shape = (cin, rank), (rank, cout)
+        key, sub = jax.random.split(key)
+        adapters[proj.key] = {
+            "a": (jax.random.normal(sub, a_shape) / math.sqrt(cin)
+                  ).astype(jnp.float32),
+            "b": jnp.zeros(b_shape, jnp.float32),
+        }
+    return adapters
+
+
+def merge_lora(params, cfg: ModelConfig, adapters: dict,
+               alpha: float = 16.0, rank: int = 8,
+               masks: Optional[dict] = None):
+    """base W + (alpha/r)·A@B, reshaped to W's layout. If masks given, the
+    delta is masked so unstructured sparsity is preserved."""
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    scale = alpha / rank
+    for proj in projections(cfg):
+        if proj.key not in adapters:
+            continue
+        ab = adapters[proj.key]
+        w = tree_get(params, proj.path)
+        if proj.expert_axis is not None:
+            delta = jnp.einsum("eir,ero->eio", ab["a"], ab["b"]) * scale
+        else:
+            delta = (ab["a"] @ ab["b"] * scale).reshape(w.shape)
+        if masks is not None and proj.key in masks:
+            delta = jnp.where(masks[proj.key], delta, 0.0)
+        params = tree_set(params, proj.path, (w + delta.astype(w.dtype)))
+    return params

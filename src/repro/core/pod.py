@@ -1,0 +1,90 @@
+"""Projection Outlier Distribution (POD) — Eqs. 5-6 and Algorithm 1.
+
+For each projection m in layer n:
+    ω_{n,m}  = ||A_n||_2 · |θ_{n,m}|                      (Eq. 5)
+    outlier  = ω^i > α · mean(ω_{n,m})                    (Eq. 6)
+    R_{n,m}  = 100 · #outliers / #params                  (Alg. 1 l.15)
+The normalised R_LLM is the *global rank*: projection importance comparable
+across the whole model. Higher rank (more outliers) => more important =>
+pruned less.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import tree_get
+from repro.core.registry import Projection, projections
+from repro.models.specs import ModelConfig
+
+DEFAULT_ALPHA = 5.0
+
+
+def weight_metric(w: jax.Array, anorm: jax.Array, proj: Projection) -> jax.Array:
+    """Eq. 5 elementwise: |W| scaled by the input-channel activation norm."""
+    w = jnp.abs(w.astype(jnp.float32))
+    if proj.expert_axis is not None:
+        # w: (E, in, out), anorm: (E, in)
+        return w * anorm[:, :, None]
+    if proj.in_axes == (0,):
+        shape = [w.shape[0]] + [1] * (w.ndim - 1)
+        return w * anorm.reshape(shape)
+    if proj.in_axes == (0, 1):
+        # o-projection (H, D, d), anorm (H, D)
+        return w * anorm[:, :, None]
+    raise ValueError(f"unsupported in_axes {proj.in_axes}")
+
+
+def outlier_ratio(metric: jax.Array, alpha: float = DEFAULT_ALPHA) -> jax.Array:
+    """Eq. 6 within one projection: fraction of ω above α·mean(ω), in %."""
+    flat = metric.reshape(-1)
+    thresh = alpha * jnp.mean(flat)
+    return 100.0 * jnp.mean((flat > thresh).astype(jnp.float32))
+
+
+def global_rank(params, cfg: ModelConfig, anorms: dict,
+                alpha: float = DEFAULT_ALPHA,
+                per_expert: bool = False) -> dict:
+    """Algorithm 1: the Mosaic Parameter Ranking Controller core.
+
+    Returns {(layer, proj_name): normalised rank}. Normalisation maps the
+    outlier ratios to mean 1.0 so the planner composes with any p.
+    """
+    raw: dict = {}
+    for proj in projections(cfg):
+        w = tree_get(params, proj.path)
+        anorm = anorms[(proj.layer, proj.tap)]
+        metric = weight_metric(w, anorm, proj)
+        if proj.expert_axis is not None and not per_expert:
+            raw[proj.key] = float(outlier_ratio(metric.reshape(-1), alpha))
+        elif proj.expert_axis is not None:
+            E = metric.shape[0]
+            ratios = jax.vmap(lambda m: outlier_ratio(m, alpha))(metric)
+            raw[proj.key] = np.asarray(ratios)
+        else:
+            raw[proj.key] = float(outlier_ratio(metric, alpha))
+    return normalize_rank(raw)
+
+
+def normalize_rank(raw: dict) -> dict:
+    """Rank Post-Processor (Fig. 5 step 6): scale ranks to mean 1.0."""
+    vals = []
+    for v in raw.values():
+        vals.extend(np.atleast_1d(v).tolist())
+    mean = float(np.mean(vals)) if vals else 1.0
+    if mean <= 0:
+        return {k: np.ones_like(np.asarray(v, dtype=np.float64)) if np.ndim(v)
+                else 1.0 for k, v in raw.items()}
+    return {k: (np.asarray(v, np.float64) / mean if np.ndim(v) else v / mean)
+            for k, v in raw.items()}
+
+
+def layer_rank(rank: dict) -> dict:
+    """Collapse a projection rank to per-layer ranks (the OWL/LOD baseline)."""
+    by_layer: dict[int, list] = {}
+    for (layer, _), v in rank.items():
+        by_layer.setdefault(layer, []).extend(np.atleast_1d(v).tolist())
+    return {layer: float(np.mean(v)) for layer, v in by_layer.items()}

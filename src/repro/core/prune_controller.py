@@ -1,0 +1,106 @@
+"""Mosaic Parameter Pruning Controller (Fig. 6).
+
+Takes the RC's global rank + a user pruning target p, plans per-projection
+sparsity targets, picks the pruning category for the target platform, and
+produces a deployment-ready pruned model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.common.tree import param_bytes
+from repro.core import composite as COMP
+from repro.core import planner as PL
+from repro.core import structured as S
+from repro.core import unstructured as U
+from repro.core.rank_controller import RankArtifact
+from repro.models.specs import ModelConfig
+
+CATEGORIES = ("unstructured", "structured", "composite")
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """Deployment target descriptor (Table I analogue)."""
+    name: str
+    memory_bytes: int
+    has_sparse_accel: bool = False   # TPU block-sparse kernel available
+    tp_size: int = 1                 # tensor-parallel alignment requirement
+
+
+def select_category(platform: Platform, dense_bytes: int, p: float) -> str:
+    """PC step 9: category by available memory (Section IV).
+
+    Plenty of memory + sparsity acceleration -> unstructured (quality).
+    Cannot fit even the composite model -> structured (max shrink).
+    Otherwise -> composite.
+    """
+    if platform.has_sparse_accel and dense_bytes <= platform.memory_bytes:
+        return "unstructured"
+    composite_bytes = dense_bytes * (1.0 - 0.5 * p)
+    if composite_bytes <= platform.memory_bytes:
+        return "composite"
+    return "structured"
+
+
+@dataclasses.dataclass
+class PruneResult:
+    params: dict
+    cfg: ModelConfig
+    category: str
+    granularity: str
+    targets: dict
+    info: dict
+    prune_seconds: float
+
+
+def run_pruning_controller(params, cfg: ModelConfig, artifact: RankArtifact,
+                           p: float,
+                           platform: Optional[Platform] = None,
+                           category: Optional[str] = None,
+                           granularity: str = "projection",
+                           selector: str = "wanda",
+                           spread: float = 0.25,
+                           within_spread: float = 0.1,
+                           structured_share: float = 0.5,
+                           align_heads: int = 1,
+                           align_channels: int = 1,
+                           per_output: bool = True) -> PruneResult:
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    t0 = time.perf_counter()
+    if category is None:
+        if platform is None:
+            category = "composite"
+        else:
+            category = select_category(platform, param_bytes(params), p)
+    assert category in CATEGORIES, category
+
+    targets = PL.plan(artifact.rank, p, granularity=granularity,
+                      spread=spread, within_spread=within_spread,
+                      weights=artifact.weights)
+    info: dict = {}
+    if category == "unstructured":
+        params, masks = U.prune_unstructured(
+            params, cfg, targets, selector=selector,
+            anorms=artifact.anorms, hessians=artifact.hessians,
+            per_output=per_output)
+        info["unstructured_sparsity"] = U.achieved_sparsity(masks)
+        new_cfg = cfg
+    elif category == "structured":
+        fractions = S.structured_fractions(targets, cfg, share=1.0)
+        params, new_cfg = S.prune_structured(
+            params, cfg, fractions, align_heads=align_heads,
+            align_channels=align_channels)
+        info["structured_fractions"] = fractions
+    else:
+        params, new_cfg, info = COMP.prune_composite(
+            params, cfg, targets, selector=selector,
+            anorms=artifact.anorms, hessians=artifact.hessians,
+            structured_share=structured_share,
+            align_heads=align_heads, align_channels=align_channels,
+            per_output=per_output)
+    return PruneResult(params=params, cfg=new_cfg, category=category,
+                       granularity=granularity, targets=targets, info=info,
+                       prune_seconds=time.perf_counter() - t0)

@@ -1,0 +1,51 @@
+"""Weight-only quantisation baseline (Table XIII comparison).
+
+Per-group symmetric round-to-nearest int{8,4,3,2} on every projection.
+The dequantised model runs through the normal forward — this measures the
+quality/compression tradeoff Mosaic is compared against in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_get, tree_set
+from repro.core.registry import projections
+from repro.models.specs import ModelConfig
+
+
+def quantize_array(w: jax.Array, bits: int, group: int = 128):
+    """Returns (q int8, scales) with per-(group of input rows) scales."""
+    orig_shape = w.shape
+    flat = w.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % group
+    flat = jnp.pad(flat, (0, pad))
+    g = flat.reshape(-1, group)
+    maxq = 2 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(g), axis=1, keepdims=True) / maxq
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(g / scale), -maxq - 1, maxq).astype(jnp.int8)
+    return q, scale, orig_shape, pad
+
+
+def dequantize_array(q, scale, orig_shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(orig_shape)
+
+
+def quantize_model(params, cfg: ModelConfig, bits: int, group: int = 128):
+    """Fake-quant every projection (round-trip). Returns (params, stats)."""
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    dense_bits = 0
+    quant_bits = 0
+    for proj in projections(cfg):
+        w = tree_get(params, proj.path)
+        q, scale, shape, pad = quantize_array(w, bits, group)
+        dense_bits += w.size * 16                          # fp16 reference
+        quant_bits += w.size * bits + scale.size * 16
+        params = tree_set(params, proj.path,
+                          dequantize_array(q, scale, shape, pad).astype(w.dtype))
+    stats = {"compression": dense_bits / max(quant_bits, 1), "bits": bits}
+    return params, stats

@@ -1,0 +1,51 @@
+"""Mosaic Parameter Ranking Controller (Fig. 5 / Algorithm 1).
+
+Profiles the LLM once over a calibration set and emits the reusable global
+rank R_LLM. One profile serves every pruning level p and every pruning
+category (the paper's key overhead win, E5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core import calibrate as C
+from repro.core import pod
+from repro.core.registry import projections
+from repro.common.tree import tree_get
+from repro.models.specs import ModelConfig
+
+
+@dataclasses.dataclass
+class RankArtifact:
+    """Output of the RC: everything the PC needs."""
+    rank: dict                  # {(layer, name): normalised rank}
+    anorms: dict                # {(layer, tap): ||A||_2 per channel}
+    weights: dict               # {(layer, name): param count}
+    n_tokens: int
+    profile_seconds: float
+    hessians: Optional[dict] = None     # only when sparsegpt requested
+
+
+def run_ranking_controller(params, cfg: ModelConfig,
+                           calibration_batches: Iterable,
+                           alpha: float = pod.DEFAULT_ALPHA,
+                           want_hessians: bool = False) -> RankArtifact:
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    t0 = time.perf_counter()
+    batches = list(calibration_batches)
+    stats, n_tokens = C.calibrate(params, cfg, batches, mode="ssq")
+    anorms = C.activation_norms(stats)
+    rank = pod.global_rank(params, cfg, anorms, alpha=alpha)
+    weights = {p.key: int(np.prod(tree_get(params, p.path).shape))
+               for p in projections(cfg)}
+    hessians = None
+    if want_hessians:
+        hessians, _ = C.calibrate(params, cfg, batches, mode="hessian")
+    return RankArtifact(rank=rank, anorms=anorms, weights=weights,
+                        n_tokens=n_tokens,
+                        profile_seconds=time.perf_counter() - t0,
+                        hessians=hessians)

@@ -1,0 +1,228 @@
+"""Structured projection pruning: physically remove attention heads,
+feed-forward channels, MoE expert channels and SSD heads (Fig. 4).
+
+TPU adaptation (DESIGN.md §3.2): kept group counts stay multiples of a
+configurable alignment so pruned models remain shardable over the tensor-
+parallel mesh axis and MXU-tile friendly. Scores are post-mask magnitudes
+by default — heads hollowed out by unstructured pruning rank lowest, which
+is exactly the paper's composite synergy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.tree import tree_get, tree_set
+from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
+                                ModelConfig, MoESpec)
+
+
+def _aligned_keep(total: int, frac: float, align: int, min_keep: int) -> int:
+    """Number of groups to keep: multiple of align, >= min_keep."""
+    keep = total - int(round(frac * total))
+    keep = max(min_keep, keep)
+    if align > 1:
+        keep = max(align, int(round(keep / align)) * align)
+    return min(keep, total)
+
+
+def _abs32(x) -> jax.Array:
+    return jnp.abs(x.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- attention
+
+def prune_attention(block: dict, spec: AttentionSpec, frac: float,
+                    align_heads: int) -> tuple[dict, AttentionSpec]:
+    """Remove the lowest-magnitude q heads, equally per kv group."""
+    attn = block["attn"]
+    g = spec.n_q // spec.n_kv                      # q heads per kv group
+    # score per q head: |q| + |o| mass
+    hs = (_abs32(attn["q"]).sum((0, 2)) + _abs32(attn["o"]).sum((1, 2)))
+    if "q_bias" in attn:
+        hs = hs + _abs32(attn["q_bias"]).sum(-1)
+    hs = np.asarray(hs).reshape(spec.n_kv, g)
+    keep_per_group = _aligned_keep(
+        g, frac, max(1, align_heads // spec.n_kv), 1)
+    # keep total q heads multiple of align_heads when possible
+    while (keep_per_group * spec.n_kv) % align_heads and keep_per_group < g:
+        keep_per_group += 1
+    kept = []
+    for kv in range(spec.n_kv):
+        order = np.argsort(-hs[kv])[:keep_per_group]
+        kept.extend(sorted(kv * g + int(h) for h in order))
+    kept = jnp.asarray(kept, jnp.int32)
+
+    new_attn = dict(attn)
+    new_attn["q"] = jnp.take(attn["q"], kept, axis=1)
+    new_attn["o"] = jnp.take(attn["o"], kept, axis=0)
+    if "q_bias" in attn:
+        new_attn["q_bias"] = jnp.take(attn["q_bias"], kept, axis=0)
+    new_block = dict(block)
+    new_block["attn"] = new_attn
+    new_spec = dataclasses.replace(spec, n_q=keep_per_group * spec.n_kv)
+    return new_block, new_spec
+
+
+# ---------------------------------------------------------------- mlp / moe
+
+def prune_mlp(block: dict, spec: MLPSpec, frac: float,
+              align_channels: int) -> tuple[dict, MLPSpec]:
+    mlp = block["mlp"]
+    cs = _abs32(mlp["up"]).sum(0) + _abs32(mlp["down"]).sum(1)
+    if spec.gated:
+        cs = cs + _abs32(mlp["gate"]).sum(0)
+    keep = _aligned_keep(spec.d_ff, frac, align_channels, align_channels)
+    kept = jnp.sort(jnp.argsort(-cs)[:keep])
+    new_mlp = {k: v for k, v in mlp.items()}
+    new_mlp["up"] = jnp.take(mlp["up"], kept, axis=1)
+    new_mlp["down"] = jnp.take(mlp["down"], kept, axis=0)
+    if spec.gated:
+        new_mlp["gate"] = jnp.take(mlp["gate"], kept, axis=1)
+    new_block = dict(block)
+    new_block["mlp"] = new_mlp
+    return new_block, dataclasses.replace(spec, d_ff=int(keep))
+
+
+def prune_moe(block: dict, spec: MoESpec, frac: float,
+              align_channels: int) -> tuple[dict, MoESpec]:
+    moe = block["moe"]
+    cs = _abs32(moe["up"]).sum(1) + _abs32(moe["down"]).sum(2)   # (E, ff)
+    if spec.gated:
+        cs = cs + _abs32(moe["gate"]).sum(1)
+    keep = _aligned_keep(spec.d_ff, frac, align_channels,
+                         min(align_channels, spec.d_ff))
+    kept = jnp.sort(jnp.argsort(-cs, axis=1)[:, :keep], axis=1)  # (E, keep)
+    take_out = jax.vmap(lambda w, idx: jnp.take(w, idx, axis=1))
+    take_in = jax.vmap(lambda w, idx: jnp.take(w, idx, axis=0))
+    new_moe = dict(moe)
+    new_moe["up"] = take_out(moe["up"], kept)
+    new_moe["down"] = take_in(moe["down"], kept)
+    if spec.gated:
+        new_moe["gate"] = take_out(moe["gate"], kept)
+    new_block = dict(block)
+    new_block["moe"] = new_moe
+    return new_block, dataclasses.replace(spec, d_ff=int(keep))
+
+
+def prune_experts(block: dict, spec: MoESpec, frac: float) -> tuple:
+    """Beyond-paper extension: remove whole experts (the coarsest MoE
+    group). Experts are scored by routed mass proxy (router column norm)
+    x weight mass; at least top_k experts are kept and the router is
+    re-shaped accordingly."""
+    moe = block["moe"]
+    E = spec.n_experts
+    router_mass = _abs32(moe["router"]).sum(0)              # (E,)
+    w_mass = _abs32(moe["up"]).sum((1, 2)) + _abs32(moe["down"]).sum((1, 2))
+    if spec.gated:
+        w_mass = w_mass + _abs32(moe["gate"]).sum((1, 2))
+    score = np.asarray(router_mass * w_mass)
+    keep = max(spec.top_k, E - int(round(frac * E)))
+    kept = np.sort(np.argsort(-score)[:keep])
+    kept_j = jnp.asarray(kept, jnp.int32)
+    new_moe = dict(moe)
+    new_moe["router"] = jnp.take(moe["router"], kept_j, axis=1)
+    for nm in ("up", "down") + (("gate",) if spec.gated else ()):
+        new_moe[nm] = jnp.take(moe[nm], kept_j, axis=0)
+    new_block = dict(block)
+    new_block["moe"] = new_moe
+    return new_block, dataclasses.replace(spec, n_experts=int(keep))
+
+
+# ---------------------------------------------------------------- mamba
+
+def prune_mamba(block: dict, spec: MambaSpec, frac: float,
+                align_heads: int) -> tuple[dict, MambaSpec]:
+    """Remove whole SSD heads (head_dim-sized channel groups)."""
+    m = block["mamba"]
+    di, P, H = spec.d_inner, spec.head_dim, spec.n_heads
+    GN = spec.n_groups * spec.d_state
+    w_in = _abs32(m["in_proj"])
+    z_mass = w_in[:, :di].sum(0).reshape(H, P).sum(1)
+    x_mass = w_in[:, di:2 * di].sum(0).reshape(H, P).sum(1)
+    out_mass = _abs32(m["out_proj"]).sum(1).reshape(H, P).sum(1)
+    hs = np.asarray(z_mass + x_mass + out_mass)
+    keep = _aligned_keep(H, frac, align_heads, align_heads)
+    kept = np.sort(np.argsort(-hs)[:keep])
+
+    ch = jnp.asarray(
+        np.concatenate([np.arange(h * P, (h + 1) * P) for h in kept]),
+        jnp.int32)                                        # kept inner channels
+    kept_j = jnp.asarray(kept, jnp.int32)
+    # in_proj column layout: [z(di), x(di), B(GN), C(GN), dt(H)]
+    cols = jnp.concatenate([
+        ch, di + ch,
+        jnp.arange(2 * di, 2 * di + 2 * GN, dtype=jnp.int32),
+        2 * di + 2 * GN + kept_j])
+    new_m = dict(m)
+    new_m["in_proj"] = jnp.take(m["in_proj"], cols, axis=1)
+    # conv channel layout: [x(di), B(GN), C(GN)]
+    conv_ch = jnp.concatenate([
+        ch, jnp.arange(di, di + 2 * GN, dtype=jnp.int32)])
+    new_m["conv_w"] = jnp.take(m["conv_w"], conv_ch, axis=0)
+    new_m["conv_b"] = jnp.take(m["conv_b"], conv_ch, axis=0)
+    for nm in ("A_log", "D", "dt_bias"):
+        new_m[nm] = jnp.take(m[nm], kept_j, axis=0)
+    new_m["norm_scale"] = jnp.take(m["norm_scale"], ch, axis=0)
+    new_m["out_proj"] = jnp.take(m["out_proj"], ch, axis=0)
+    new_block = dict(block)
+    new_block["mamba"] = new_m
+    return new_block, dataclasses.replace(spec, d_inner=int(keep) * P)
+
+
+# ---------------------------------------------------------------- driver
+
+def structured_fractions(targets: dict, cfg: ModelConfig,
+                         share: float = 1.0) -> dict:
+    """Per-(layer, unit) structured fraction from per-projection targets."""
+    out: dict = {}
+    for i, spec in enumerate(cfg.layers()):
+        if isinstance(spec.mixer, AttentionSpec):
+            vals = [targets.get((i, n), 0.0) for n in ("q", "k", "v", "o")]
+            out[(i, "heads")] = share * float(np.mean(vals))
+        else:
+            vals = [targets.get((i, n), 0.0) for n in ("in_proj", "out_proj")]
+            out[(i, "mamba")] = share * float(np.mean(vals))
+        if spec.ffn is not None:
+            names = ("gate", "up", "down")
+            vals = [targets[(i, n)] for n in names if (i, n) in targets]
+            out[(i, "ffn")] = share * float(np.mean(vals))
+    return out
+
+
+def prune_structured(params, cfg: ModelConfig, fractions: dict,
+                     align_heads: int = 1, align_channels: int = 1,
+                     expert_frac: float = 0.0):
+    """Returns (new_params, new_cfg) with physically smaller projections."""
+    assert not cfg.scan_layers, "structured pruning operates on unrolled models"
+    new_blocks = []
+    new_specs = []
+    for i, spec in enumerate(cfg.layers()):
+        block = params["blocks"][i]
+        mixer = spec.mixer
+        if isinstance(mixer, AttentionSpec):
+            f = fractions.get((i, "heads"), 0.0)
+            block, mixer = prune_attention(block, mixer, f, align_heads)
+        else:
+            f = fractions.get((i, "mamba"), 0.0)
+            block, mixer = prune_mamba(block, mixer, f, align_heads)
+        ffn = spec.ffn
+        if isinstance(ffn, MoESpec):
+            if expert_frac > 0.0:
+                block, ffn = prune_experts(block, ffn, expert_frac)
+            f = fractions.get((i, "ffn"), 0.0)
+            block, ffn = prune_moe(block, ffn, f, align_channels)
+        elif isinstance(ffn, MLPSpec):
+            f = fractions.get((i, "ffn"), 0.0)
+            block, ffn = prune_mlp(block, ffn, f, align_channels)
+        new_blocks.append(block)
+        new_specs.append(LayerSpec(mixer=mixer, ffn=ffn))
+    new_params = dict(params)
+    new_params["blocks"] = new_blocks
+    new_cfg = cfg.replace(pattern=tuple(new_specs), n_periods=1,
+                          scan_layers=False)
+    return new_params, new_cfg

@@ -1,0 +1,130 @@
+"""Unstructured projection pruning: per-projection masks at POD targets.
+
+Selectors:
+  magnitude — |W|
+  wanda     — |W| · ||A||_2  (Eq. 5 metric; the paper's ranking metric)
+  sparsegpt — OBS scores w²/diag(H⁻¹)² with weight update (repro.core.sparsegpt)
+
+Masked weights are exactly zero; mask counts use floor(target·numel) so the
+achieved sparsity is exact and idempotent.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_get, tree_set
+from repro.core.pod import weight_metric
+from repro.core.registry import Projection, projections
+from repro.models.specs import ModelConfig
+
+
+def mask_from_scores(scores: jax.Array, target: float) -> jax.Array:
+    """Keep the highest-scoring (1-target) fraction. Exact count semantics."""
+    flat = scores.reshape(-1).astype(jnp.float32)
+    k_prune = int(target * flat.size)
+    if k_prune <= 0:
+        return jnp.ones(scores.shape, bool)
+    if k_prune >= flat.size:
+        return jnp.zeros(scores.shape, bool)
+    order = jnp.argsort(flat)                      # ascending
+    mask_flat = jnp.ones((flat.size,), bool).at[order[:k_prune]].set(False)
+    return mask_flat.reshape(scores.shape)
+
+
+def block_mask_from_metric(scores: jax.Array, target: float,
+                           block: int = 16) -> jax.Array:
+    """TPU-native semi-structured mask: prune whole (block x block) tiles
+    with the lowest aggregate metric (DESIGN.md §3.1 — the analogue of
+    2:4 sparsity; every pruned tile is skipped by the block-sparse
+    Pallas kernel)."""
+    s2 = scores.reshape(scores.shape[0], -1) if scores.ndim != 2 else scores
+    K, N = s2.shape
+    Kb, Nb = K // block, N // block
+    if Kb == 0 or Nb == 0:
+        return mask_from_scores(scores, target)
+    trimmed = s2[:Kb * block, :Nb * block]
+    tiles = trimmed.reshape(Kb, block, Nb, block).sum((1, 3))
+    tile_mask = mask_from_scores(tiles, target)
+    full = jnp.repeat(jnp.repeat(tile_mask, block, 0), block, 1)
+    out = jnp.ones((K, N), bool).at[:Kb * block, :Nb * block].set(full)
+    return out.reshape(scores.shape)
+
+
+def per_output_mask(scores: jax.Array, target: float,
+                    in_axes: tuple) -> jax.Array:
+    """Wanda-style: prune the lowest fraction *within each output neuron*."""
+    # Move input axes to the front, flatten: (In, Out)
+    ndim = scores.ndim
+    in_ax = tuple(a % ndim for a in in_axes)
+    perm = list(in_ax) + [a for a in range(ndim) if a not in in_ax]
+    s = jnp.transpose(scores, perm)
+    in_dim = 1
+    for a in in_ax:
+        in_dim *= scores.shape[a]
+    s2 = s.reshape(in_dim, -1)
+    k_prune = int(target * in_dim)
+    if k_prune <= 0:
+        m2 = jnp.ones_like(s2, bool)
+    else:
+        order = jnp.argsort(s2, axis=0)
+        rank = jnp.argsort(order, axis=0)          # rank of each entry
+        m2 = rank >= k_prune
+    m = m2.reshape(s.shape)
+    inv = [0] * ndim
+    for i, a in enumerate(perm):
+        inv[a] = i
+    return jnp.transpose(m, inv)
+
+
+def score_projection(w: jax.Array, proj: Projection, selector: str,
+                     anorms: Optional[dict]) -> jax.Array:
+    if selector == "magnitude":
+        return jnp.abs(w.astype(jnp.float32))
+    if selector == "wanda":
+        if anorms is None:
+            raise ValueError("wanda selector needs activation norms")
+        return weight_metric(w, anorms[(proj.layer, proj.tap)], proj)
+    raise ValueError(f"unknown selector {selector!r}")
+
+
+def prune_unstructured(params, cfg: ModelConfig, targets: dict,
+                       selector: str = "wanda",
+                       anorms: Optional[dict] = None,
+                       hessians: Optional[dict] = None,
+                       per_output: bool = False):
+    """Apply per-projection masks. Returns (new_params, masks).
+
+    targets: {(layer, name): fraction}. selector='sparsegpt' additionally
+    updates surviving weights (OBS reconstruction).
+    """
+    masks: dict = {}
+    for proj in projections(cfg):
+        t = targets.get(proj.key, 0.0)
+        w = tree_get(params, proj.path)
+        if selector == "sparsegpt":
+            from repro.core.sparsegpt import sparsegpt_prune
+            H = hessians[(proj.layer, proj.tap)]
+            new_w, mask = sparsegpt_prune(w, H, t, proj)
+        elif selector == "wanda_block":
+            scores = score_projection(w, proj, "wanda", anorms)
+            mask = block_mask_from_metric(scores, t)
+            new_w = jnp.where(mask, w, jnp.zeros_like(w))
+        else:
+            scores = score_projection(w, proj, selector, anorms)
+            if per_output:
+                mask = per_output_mask(scores, t, proj.in_axes)
+            else:
+                mask = mask_from_scores(scores, t)
+            new_w = jnp.where(mask, w, jnp.zeros_like(w))
+        params = tree_set(params, proj.path, new_w.astype(w.dtype))
+        masks[proj.key] = mask
+    return params, masks
+
+
+def achieved_sparsity(masks: dict) -> float:
+    total = sum(int(m.size) for m in masks.values())
+    zeros = sum(int(m.size) - int(jnp.sum(m)) for m in masks.values())
+    return zeros / max(total, 1)

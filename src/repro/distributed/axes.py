@@ -1,0 +1,118 @@
+"""Logical-axis sharding rules (MaxText-style) + divisibility-aware hints.
+
+Model code names tensor dimensions logically ('batch', 'heads', 'ffn', ...);
+the active rule set maps them to mesh axes. ``hint`` silently drops any
+mapping whose mesh-axis size does not divide the dimension — so the same
+model code runs unsharded on 1 CPU device, on a 16x16 pod, and on awkward
+head counts (falling back to replication instead of crashing; the roofline
+report shows where the fallback costs).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "head_dim": None,
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": "data",
+    "inner": "model",       # mamba d_inner / ssd heads
+    "state": None,
+    "fsdp": "data",         # parameter sharding axis
+    # residual stream seq sharding (Megatron-style sequence parallelism);
+    # enabled per-cell by the dry-run/launcher for activation memory
+    "residual_seq": None,
+}
+
+_MESH: Optional[Mesh] = None
+_RULES: dict = dict(DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    global _MESH, _RULES
+    prev = (_MESH, _RULES)
+    _MESH = mesh
+    _RULES = dict(DEFAULT_RULES) if rules is None else dict(rules)
+    try:
+        yield
+    finally:
+        _MESH, _RULES = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def _mesh_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= _mesh_size(mesh, a)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+def resolve_spec(mesh: Mesh, shape, logical, rules: Optional[dict] = None) -> P:
+    """Logical names -> PartitionSpec, dropping non-dividing axes."""
+    rules = rules if rules is not None else _RULES
+    parts = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        if isinstance(axis, (tuple, list)):
+            axis = tuple(a for a in axis if a in mesh.shape)
+            axis = axis if axis else None
+        elif axis is not None and axis not in mesh.shape:
+            axis = None
+        if axis is not None and dim % _mesh_size(mesh, axis) != 0:
+            axis = None
+        parts.append(axis)
+    return P(*parts)
+
+
+def hint(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint if a mesh is active; no-op otherwise."""
+    if _MESH is None:
+        return x
+    spec = resolve_spec(_MESH, x.shape, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))
+
+
+def named_sharding(mesh: Mesh, shape, logical,
+                   rules: Optional[dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, shape, logical, rules))
+
+
+def model_axis_size() -> int:
+    if _MESH is None:
+        return 1
+    axis = _RULES.get("heads")
+    return _mesh_size(_MESH, axis) if axis else 1
+
+
+def hint_heads(x: jax.Array, kv: bool = False) -> jax.Array:
+    """(B, S, H, D) attention tensors: shard heads over 'model' when the
+    head count divides; otherwise fall back to head_dim sharding (head_dim
+    is always a multiple of 16 here). The fallback keeps awkward head
+    counts (12, 40, 8, 10...) fully model-parallel via contraction-dim
+    sharding instead of padding heads."""
+    if _MESH is None:
+        return x
+    name = "kv_heads" if kv else "heads"
+    spec = resolve_spec(_MESH, x.shape, ("batch", "seq", name, None))
+    if spec[2] is None:
+        spec = resolve_spec(_MESH, x.shape, ("batch", "seq", None, name))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,64 @@
+"""Elastic scaling: derive a mesh from whatever devices are alive and
+reshard checkpoints onto it.
+
+Policy: keep the model axis as close to the target TP degree as the device
+count allows (TP must divide the model's shardable dims), grow/shrink data
+parallelism with the fleet. Restores go through CheckpointManager.restore
+with the new mesh's shardings — no resharding-aware file format needed
+because checkpoints store unsharded logical arrays.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.specs import ModelConfig
+
+
+def choose_mesh_shape(n_devices: int, target_tp: int = 16,
+                      multi_pod: bool = False) -> tuple:
+    """(data, model) or (pod, data, model) sized to the live fleet."""
+    tp = min(target_tp, n_devices)
+    while n_devices % tp:
+        tp //= 2
+    dp = n_devices // tp
+    if multi_pod and dp % 2 == 0 and dp > 1:
+        return (2, dp // 2, tp)
+    return (dp, tp)
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None, target_tp: int = 16,
+                      multi_pod: bool = False) -> Mesh:
+    devices = jax.devices()
+    if n_devices is not None:
+        devices = devices[:n_devices]
+    shape = choose_mesh_shape(len(devices), target_tp, multi_pod)
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    import numpy as np
+    return Mesh(np.asarray(devices).reshape(shape), names)
+
+
+def reshard_state(state, mesh: Mesh, cfg: ModelConfig):
+    """Move an existing (host or differently-sharded) train state onto a
+    new mesh using the standard sharding policy."""
+    from repro.distributed import sharding as SH
+    pspecs = SH.param_shardings(mesh, cfg)
+
+    def put(tree, shardings):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(jax.device_get(x), s), tree, shardings)
+
+    new_state = dict(state)
+    new_state["params"] = put(state["params"], pspecs)
+    if "opt" in state:
+        opt = dict(state["opt"])
+        opt["m"] = put(opt["m"], pspecs)
+        try:
+            opt["v"] = put(opt["v"], pspecs)
+        except ValueError:
+            pass   # factored v has different structure; leave on default
+        new_state["opt"] = opt
+    return new_state

@@ -1,0 +1,76 @@
+"""Block-sparse GEMM Pallas TPU kernel — the TPU-native realisation of
+composite-pruned projection matmuls (DESIGN.md §3.1).
+
+Unstructured pruning at high POD targets leaves many all-zero 128x128
+weight tiles. The kernel walks, per output block-column, a scalar-
+prefetched list of the *nonzero* K-block indices only (MegaBlocks /
+SplashAttention pattern): zero blocks cost neither HBM->VMEM traffic nor
+MXU cycles. Grid = (M-blocks, N-blocks, max_nnz); padded steps are
+masked out with @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *,
+            max_nnz: int):
+    n = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < count_ref[n])
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_nnz - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def block_sparse_matmul(x: jax.Array, w: jax.Array, counts: jax.Array,
+                        indices: jax.Array, *, block_m: int = 128,
+                        block_k: int = 128, block_n: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """y = x @ w, visiting only nonzero (K-block, N-block) weight tiles.
+
+    x: (M, K); w: (K, N) (zeros in pruned blocks);
+    counts: (N/bn,) int32 — nonzero K-blocks per output block-column;
+    indices: (N/bn, max_nnz) int32 — their K-block ids (padded by repeating
+    the last valid id so prefetch stays in-bounds).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    assert M % block_m == 0 and K % block_k == 0 and N % block_n == 0
+    max_nnz = indices.shape[1]
+
+    grid = (M // block_m, N // block_n, max_nnz)
+    kernel = functools.partial(_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k),
+                             lambda m, n, s, cnt, idx: (m, idx[n, s])),
+                pl.BlockSpec((block_k, block_n),
+                             lambda m, n, s, cnt, idx: (idx[n, s], n)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda m, n, s, cnt, idx: (m, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(counts, indices, x, w)

@@ -1,0 +1,51 @@
+"""Jit-ready wrappers: block-map construction from unstructured-pruning
+masks + the dispatch into the Pallas kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_sparse.kernel import block_sparse_matmul
+
+
+def block_mask_from_weight_mask(mask, block_k: int, block_n: int):
+    """Elementwise keep-mask (K, N) -> block-level nonzero map (K/bk, N/bn)."""
+    K, N = mask.shape
+    assert K % block_k == 0 and N % block_n == 0
+    m = np.asarray(mask).reshape(K // block_k, block_k, N // block_n, block_n)
+    return m.any(axis=(1, 3))
+
+
+def plan_blocks(block_mask) -> tuple:
+    """Block map -> (counts (nN,), indices (nN, max_nnz)) for the kernel."""
+    bm = np.asarray(block_mask)
+    nK, nN = bm.shape
+    counts = bm.sum(axis=0).astype(np.int32)
+    max_nnz = max(int(counts.max()), 1)
+    indices = np.zeros((nN, max_nnz), np.int32)
+    for n in range(nN):
+        nz = np.nonzero(bm[:, n])[0]
+        if len(nz) == 0:
+            nz = np.array([0])
+        pad = np.full(max_nnz - min(len(nz), max_nnz), nz[-1])
+        indices[n] = np.concatenate([nz[:max_nnz], pad])
+    return jnp.asarray(counts), jnp.asarray(indices)
+
+
+def sparse_density(block_mask) -> float:
+    bm = np.asarray(block_mask)
+    return float(bm.mean())
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                             "interpret"))
+def blocksparse_matmul(x, w, counts, indices, block_m=128, block_k=128,
+                       block_n=128, interpret=False):
+    """Public op: y = x @ w visiting nonzero weight blocks only."""
+    return block_sparse_matmul(x, w, counts, indices, block_m=block_m,
+                               block_k=block_k, block_n=block_n,
+                               interpret=interpret)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the block-sparse GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_sparse_matmul_ref(x: jax.Array, w: jax.Array,
+                            block_mask: jax.Array, block_k: int,
+                            block_n: int) -> jax.Array:
+    """y = x @ (w with pruned blocks zeroed). block_mask: (K/bk, N/bn)."""
+    K, N = w.shape
+    mask = jnp.repeat(jnp.repeat(block_mask, block_k, axis=0), block_n, axis=1)
+    return x @ jnp.where(mask, w, jnp.zeros_like(w))

@@ -1,0 +1,97 @@
+"""Causal flash attention Pallas TPU kernel (GQA-aware).
+
+Online-softmax over KV blocks with (m, l, acc) VMEM scratch carried across
+the innermost grid axis. Strictly-future KV blocks are skipped with
+@pl.when (no MXU work); the diagonal block applies the elementwise causal
+mask. This is the TPU hot path for the jnp chunked-attention oracle in
+repro.models.layers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, n_kv_blocks: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki <= qi)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale       # (bq, D)
+        k = k_ref[0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0].astype(jnp.float32)               # (bk, D)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+        # elementwise causal mask — only the diagonal block needs it
+        rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + qi * block_q
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + ki * block_k
+        s = jnp.where(jnp.logical_or(ki < qi, rows >= cols), s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    n_q_heads: int, n_kv_heads: int,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """Causal self-attention. q: (B·Hq, S, D); k, v: (B·Hkv, S, D) — heads
+    flattened row-major (batch-major). Returns (B·Hq, S, D)."""
+    BH, S, D = q.shape
+    assert S % block_q == 0 and S % block_k == 0
+    group = n_q_heads // n_kv_heads
+    scale = 1.0 / math.sqrt(D)
+    grid = (BH, S // block_q, S // block_k)
+
+    def kv_index(bh, qi, ki):
+        b = bh // n_q_heads
+        h = (bh % n_q_heads) // group
+        return (b * n_kv_heads + h, ki, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv_blocks=S // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,25 @@
+"""Jit wrapper matching the model's (B, S, H, D) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def flash_attention_bshd(q, k, v, block_q: int = 256, block_k: int = 256,
+                         interpret: bool = False):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D), causal."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * Hq, S, D)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, S, D)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, S, D)
+    of = flash_attention(qf, kf, vf, n_q_heads=Hq, n_kv_heads=Hkv,
+                         block_q=block_q, block_k=block_k,
+                         interpret=interpret)
+    return jnp.moveaxis(of.reshape(B, Hq, S, D), 1, 2)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: dense causal GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, n_q_heads: int, n_kv_heads: int):
+    """Same flattened (B·H, S, D) layout as the kernel."""
+    BHq, S, D = q.shape
+    B = BHq // n_q_heads
+    group = n_q_heads // n_kv_heads
+    qb = q.reshape(B, n_kv_heads, group, S, D)
+    kb = k.reshape(B, n_kv_heads, S, D)
+    vb = v.reshape(B, n_kv_heads, S, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vb)
+    return o.reshape(BHq, S, D)

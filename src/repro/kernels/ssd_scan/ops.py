@@ -1,0 +1,23 @@
+"""Jit wrapper matching the model's (B, L, H, P) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_apply(xt, da, Bm, Cm, chunk: int = 256, interpret: bool = False):
+    """xt: (B, L, H, P); da: (B, L, H); Bm/Cm: (B, L, N) (groups=1).
+    Returns y: (B, L, H, P)."""
+    B, L, H, P = xt.shape
+    N = Bm.shape[-1]
+    xt_f = jnp.moveaxis(xt, 2, 1).reshape(B * H, L, P)
+    da_f = jnp.moveaxis(da, 2, 1).reshape(B * H, L)
+    B_f = jnp.repeat(Bm[:, None], H, axis=1).reshape(B * H, L, N)
+    C_f = jnp.repeat(Cm[:, None], H, axis=1).reshape(B * H, L, N)
+    y = ssd_scan(xt_f, da_f, B_f, C_f, chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(y.reshape(B, H, L, P), 1, 2)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: the model's chunked SSD (repro.models.ssm)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(xt, da, Bm, Cm, chunk: int = 256):
+    """Same (BH, L, ...) flat layout as the kernel."""
+    BH, L, P = xt.shape
+    y, _ = ssd_chunked(xt[:, :, None, :],          # (BH, L, 1, P): H folded
+                       da[:, :, None],
+                       Bm, Cm, chunk)
+    return y[:, :, 0, :]

@@ -1,0 +1,51 @@
+"""Fused Wanda-metric reduction kernel (the Mosaic RC hot loop).
+
+Computes, in one pass over the weight tiles, per-tile partial sums of
+ω = |W|·||A||₂ (pass 1) or partial outlier counts ω > threshold (pass 2).
+Eq. 5/6 over a projection never materialises the full metric tensor in
+HBM: tiles stream HBM->VMEM once, the VPU does |·|·scale + reduce in
+registers. Grid = (K-blocks, N-blocks); partials land in a tiny
+(gK, gN) array reduced by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(w_ref, a_ref, o_ref, *, threshold: Optional[float]):
+    w = jnp.abs(w_ref[...].astype(jnp.float32))
+    metric = w * a_ref[...].astype(jnp.float32)       # (bk, bn), a: (bk, 1)
+    if threshold is None:
+        o_ref[0, 0] = jnp.sum(metric)
+    else:
+        o_ref[0, 0] = jnp.sum((metric > threshold).astype(jnp.float32))
+
+
+def wanda_partials(w: jax.Array, anorm: jax.Array,
+                   threshold: Optional[float] = None, *,
+                   block_k: int = 256, block_n: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """w: (K, N), anorm: (K,). Returns (K/bk, N/bn) partial sums/counts."""
+    K, N = w.shape
+    block_k = min(block_k, K)
+    block_n = min(block_n, N)
+    assert K % block_k == 0 and N % block_n == 0
+    grid = (K // block_k, N // block_n)
+    kernel = functools.partial(_kernel, threshold=threshold)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_n), lambda k, n: (k, n)),
+            pl.BlockSpec((block_k, 1), lambda k, n: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda k, n: (k, n)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=interpret,
+    )(w, anorm.reshape(-1, 1))

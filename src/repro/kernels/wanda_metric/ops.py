@@ -1,0 +1,31 @@
+"""Two-pass fused outlier-ratio op built on the Pallas partial kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wanda_metric.kernel import wanda_partials
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_k", "block_n",
+                                             "interpret"))
+def outlier_ratio(w: jax.Array, anorm: jax.Array, alpha: float = 5.0,
+                  block_k: int = 256, block_n: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """Eq. 6 outlier percentage for one projection, fused on-chip."""
+    total = jnp.sum(wanda_partials(w, anorm, None, block_k=block_k,
+                                   block_n=block_n, interpret=interpret))
+    mean = total / w.size
+    thresh = jnp.maximum(alpha * mean, 1e-30)
+    count = jnp.sum(_count(w, anorm, thresh, block_k, block_n, interpret))
+    return 100.0 * count / w.size
+
+
+def _count(w, anorm, thresh, block_k, block_n, interpret):
+    # threshold is dynamic: fold it into anorm scaling (metric > t  <=>
+    # |W|*(anorm/t) > 1), so the kernel's static threshold stays 1.0.
+    scaled = anorm / thresh
+    return wanda_partials(w, scaled, 1.0, block_k=block_k, block_n=block_n,
+                          interpret=interpret)

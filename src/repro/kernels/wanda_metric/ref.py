@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused Wanda-metric reduction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def metric_ref(w, anorm):
+    return jnp.abs(w.astype(jnp.float32)) * anorm.astype(jnp.float32)[:, None]
+
+
+def metric_sum_ref(w, anorm):
+    return jnp.sum(metric_ref(w, anorm))
+
+
+def outlier_count_ref(w, anorm, threshold: float):
+    return jnp.sum((metric_ref(w, anorm) > threshold).astype(jnp.float32))
+
+
+def outlier_ratio_ref(w, anorm, alpha: float):
+    m = metric_ref(w, anorm)
+    return 100.0 * jnp.mean((m > alpha * jnp.mean(m)).astype(jnp.float32))

@@ -1,0 +1,138 @@
+"""Compiled-artifact analysis: cost terms, memory, collective bytes.
+
+collective_bytes is not in cost_analysis — we parse the optimised HLO and
+sum result-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Ops inside `while` bodies (scan over
+layers) execute n_periods times but appear once in the text, so callers
+use the two-point period extrapolation (compile with P=1 and P=2 periods;
+per-period cost = c2 - c1; total = c1 + (P-1)(c2-c1)).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import numpy as np
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s+([a-z0-9]+)\[([\d,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_TUPLE_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum of result bytes per collective kind (…-done ops skipped so
+    async pairs are not double-counted)."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            inner, kind = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(inner):
+                out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> dict:
+    """Per-device memory from the compiled executable.
+
+    peak_memory_in_bytes is XLA's liveness-aware peak (the fit criterion);
+    argument/temp sizes are also recorded — the CPU backend's buffer
+    assignment is conservative vs the TPU memory-minimising scheduler, so
+    temp is an upper bound.
+    """
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "peak_memory_in_bytes", "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(ma, k, 0) or 0)
+    # state (args, aliased in-place) + conservative temps
+    out["per_device_total"] = (out["argument_size_in_bytes"]
+                               + out["temp_size_in_bytes"])
+    return out
+
+
+def extrapolate(c1: dict, c2: dict, n_periods: int) -> dict:
+    """Two-point extrapolation over scan periods (see module docstring)."""
+    out = {}
+    for k in c1:
+        if isinstance(c1[k], dict):
+            out[k] = extrapolate(c1[k], c2[k], n_periods)
+        else:
+            per = c2[k] - c1[k]
+            out[k] = c1[k] + (n_periods - 1) * per
+    return out
+
+
+# ------------------------------------------------------------ hardware
+
+TPU_V5E = {
+    "name": "tpu-v5e",
+    "peak_flops_bf16": 197e12,     # per chip
+    "hbm_bw": 819e9,               # bytes/s per chip
+    "ici_bw": 50e9,                # bytes/s per link
+    "hbm_bytes": 16 * 1024 ** 3,
+}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, n_chips: int,
+                   hw: dict = TPU_V5E) -> dict:
+    """The three §Roofline terms, in seconds. cost_analysis numbers are
+    per-device under SPMD, so chip counts divide only the collective term
+    (flops/bytes already are per-chip)."""
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = bytes_accessed / hw["hbm_bw"]
+    collective_s = coll_bytes / hw["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]
+                              if k.endswith("_s") else -1)
+    return terms

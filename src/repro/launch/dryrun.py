@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell: build the step function
+(train_step / prefill_step / serve_step), jit with the production
+shardings, ``.lower().compile()`` on the 16x16 single-pod mesh and the
+2x16x16 multi-pod mesh, and record memory_analysis / cost_analysis /
+collective bytes. Cost terms for scanned stacks use the two-point period
+extrapolation (launch/analysis.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, ASSIGNED, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable
+from repro.distributed import sharding as SH
+from repro.launch import analysis as AN
+from repro.launch import specs as SPEC
+from repro.launch.mesh import make_production_mesh
+from repro.models.specs import ModelConfig
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.train import optimizer as OPT
+from repro.train.train_step import make_train_step
+
+# Per-(arch, shape) resource knobs (memory fitting at 16 GB/chip v5e).
+# microbatches <= global_batch / dp_size (16) so every microbatch still
+# shards over the data axis. seq_shard = Megatron-style sequence-parallel
+# residual stream (activation stash /16).
+DEFAULTS = {"microbatches": 16, "factored": False, "m_dtype": "float32",
+            "seq_shard": False, "accum_dtype": "float32"}
+OVERRIDES = {
+    ("nemotron-4-340b", "train_4k"): {
+        "factored": True, "m_dtype": "bfloat16", "seq_shard": True,
+        "accum_dtype": "bfloat16"},
+    ("qwen2-72b", "train_4k"): {"seq_shard": True},
+    ("llama4-scout-17b-16e", "train_4k"): {"seq_shard": True},
+    ("jamba-v0.1-52b", "train_4k"): {"seq_shard": True},
+}
+
+
+def knobs(arch: str, shape: str) -> dict:
+    out = dict(DEFAULTS)
+    out.update(OVERRIDES.get((arch, shape), {}))
+    return out
+
+
+# ------------------------------------------------------------ shardings
+
+def _drop_axis(spec: P, axis_from_end: int) -> P:
+    parts = list(spec)
+    if len(parts) >= axis_from_end:
+        del parts[len(parts) - axis_from_end]
+    return P(*parts)
+
+
+def opt_specs(pspec_tree, param_struct, opt_cfg: OPT.OptConfig):
+    """PartitionSpec tree for the optimizer state, mirroring params."""
+    m = pspec_tree
+    if opt_cfg.factored:
+        def v_spec(spec, leaf):
+            if leaf.ndim >= 2 and leaf.shape[-1] >= 2 and leaf.shape[-2] >= 2:
+                return {"row": _drop_axis(spec, 1), "col": _drop_axis(spec, 2)}
+            return {"full": spec}
+        v = jax.tree.map(v_spec, pspec_tree, param_struct,
+                         is_leaf=lambda x: isinstance(x, P))
+    else:
+        v = pspec_tree
+    return {"m": m, "v": v, "step": P()}
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------------ builders
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, kn: dict):
+    """Returns (fn, args (structs), in_shardings, out_shardings, donate)."""
+    pspecs = SH.param_specs(mesh, cfg)
+    if shape.kind == "train" and kn.get("skip_opt"):
+        # grad-only variant (cost measurement): one microbatch, no update
+        from repro.train.train_step import make_loss_fn
+        params_struct = SPEC.param_struct(cfg, dtype=jnp.float32)
+        loss_fn = make_loss_fn(cfg, mesh=mesh, param_specs=pspecs)
+        ins = SPEC.input_specs(cfg, shape)
+        tok_shd = SH.input_sharding(mesh, shape.batch)
+
+        def fn(params, tokens, labels, frontend_embeds=None):
+            (_, (ce, _)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, tokens, labels,
+                                       frontend_embeds)
+            return grads, ce
+        args = (params_struct, ins["tokens"], ins["labels"])
+        in_shd = (to_shardings(mesh, pspecs), tok_shd, tok_shd)
+        if "frontend_embeds" in ins:
+            fe_shd = NamedSharding(mesh, P(tok_shd.spec[0], None, None))
+            args = args + (ins["frontend_embeds"],)
+            in_shd = in_shd + (fe_shd,)
+        return fn, args, in_shd, (to_shardings(mesh, pspecs), None), ()
+
+    if shape.kind == "train":
+        opt_cfg = OPT.OptConfig(factored=kn["factored"], m_dtype=kn["m_dtype"])
+        state_struct = SPEC.train_state_struct(cfg, opt_cfg)
+        state_spec = {"params": pspecs,
+                      "opt": opt_specs(pspecs, state_struct["params"], opt_cfg)}
+        ins = SPEC.input_specs(cfg, shape)
+        tok_shd = SH.input_sharding(mesh, shape.batch)
+        bspec = tok_shd.spec
+        fn = make_train_step(cfg, opt_cfg, n_microbatches=kn["microbatches"],
+                             mesh=mesh, batch_spec=bspec,
+                             accum_dtype=jnp.dtype(kn["accum_dtype"]),
+                             param_specs=pspecs)
+        args = (state_struct, ins["tokens"], ins["labels"])
+        in_shd = (to_shardings(mesh, state_spec), tok_shd, tok_shd)
+        if "frontend_embeds" in ins:
+            fe_shd = NamedSharding(mesh, P(*((bspec[0],) + (None,) * 2)))
+            args = args + (ins["frontend_embeds"],)
+            in_shd = in_shd + (fe_shd,)
+        out_shd = (to_shardings(mesh, state_spec), None)
+        return fn, args, in_shd, out_shd, (0,)
+
+    params = SPEC.param_struct(cfg, dtype=jnp.bfloat16)
+    cache_shd = SH.cache_shardings(mesh, cfg, shape.batch)
+    tok_shd = SH.input_sharding(mesh, shape.batch)
+    if shape.kind == "prefill":
+        ins = SPEC.input_specs(cfg, shape)
+        fn0 = make_prefill_step(cfg)
+        if "frontend_embeds" in ins:
+            bspec = tok_shd.spec
+            fe_shd = NamedSharding(mesh, P(bspec[0], None, None))
+            fn = lambda p, t, c, fe: fn0(p, t, c, frontend_embeds=fe)
+            args = (params, ins["tokens"], ins["cache"],
+                    ins["frontend_embeds"])
+            in_shd = (to_shardings(mesh, pspecs), tok_shd, cache_shd, fe_shd)
+        else:
+            fn = fn0
+            args = (params, ins["tokens"], ins["cache"])
+            in_shd = (to_shardings(mesh, pspecs), tok_shd, cache_shd)
+        return fn, args, in_shd, (None, cache_shd), (2,)
+
+    # decode
+    ins = SPEC.input_specs(cfg, shape)
+    fn = make_serve_step(cfg)
+    args = (params, ins["cache"], ins["tokens"],
+            jax.ShapeDtypeStruct((), jnp.int32))
+    in_shd = (to_shardings(mesh, pspecs), cache_shd, tok_shd, None)
+    return fn, args, in_shd, (None, cache_shd), (1,)
+
+
+# ------------------------------------------------------------ the run
+
+def compile_cell(cfg: ModelConfig, shape: ShapeSpec, mesh, kn: dict):
+    fn, args, in_shd, out_shd, donate = build_cell(cfg, shape, mesh, kn)
+    jfn = jax.jit(fn, in_shardings=in_shd, out_shardings=out_shd,
+                  donate_argnums=donate)
+    t0 = time.perf_counter()
+    from repro.distributed import axes as AX
+    rules = dict(AX.DEFAULT_RULES)
+    if kn.get("seq_shard"):
+        rules["residual_seq"] = "model"
+    with AX.use_mesh(mesh, rules):
+        lowered = jfn.lower(*args)
+    compiled = lowered.compile()
+    dt = time.perf_counter() - t0
+    return lowered, compiled, dt
+
+
+def _cost_of(compiled) -> dict:
+    return {**AN.cost_summary(compiled),
+            "collective_bytes": AN.collective_bytes(compiled.as_text())["total"]}
+
+
+def measure_cost(cfg: ModelConfig, shape: ShapeSpec, mesh, kn: dict) -> dict:
+    """True per-step cost terms via unrolled depth-1/2 compiles.
+
+    HloCostAnalysis counts `while` bodies once, so scanned stacks
+    undercount. We instead compile *unrolled* variants with 1 and 2
+    pattern periods (cost is affine in depth: f(d) = outside + d*layer),
+    with a single microbatch for train, then recompose:
+        train:  n_micro * [outside + P*layer] + optimizer_update
+        serve:  outside + P*layer
+    """
+    if shape.kind == "train":
+        micro = max(1, shape.batch // kn["microbatches"])
+        shape_m = ShapeSpec(shape.name, "train", shape.seq, micro)
+        kn_m = {**kn, "microbatches": 1, "skip_opt": True}
+    else:
+        shape_m = shape
+        kn_m = kn
+    costs = []
+    for d in (1, 2):
+        cfg_d = cfg.replace(n_periods=d, scan_layers=False)
+        _, comp, _ = compile_cell(cfg_d, shape_m, mesh, kn_m)
+        costs.append(_cost_of(comp))
+        del comp
+    layer = {k: costs[1][k] - costs[0][k] for k in costs[0]}
+    outside = {k: costs[0][k] - layer[k] for k in costs[0]}
+    per_call = {k: outside[k] + cfg.n_periods * layer[k] for k in costs[0]}
+    if shape.kind == "train":
+        n_micro = kn["microbatches"]
+        total = {k: n_micro * per_call[k] for k in per_call}
+        opt_cost = measure_opt_cost(cfg, mesh, kn)
+        total = {k: total[k] + opt_cost.get(k, 0.0) for k in total}
+        return total
+    return per_call
+
+
+def measure_opt_cost(cfg: ModelConfig, mesh, kn: dict) -> dict:
+    """Cost of the optimizer update alone (runs once per step)."""
+    opt_cfg = OPT.OptConfig(factored=kn["factored"], m_dtype=kn["m_dtype"])
+    state_struct = SPEC.train_state_struct(cfg, opt_cfg)
+    grads_struct = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        state_struct["params"])
+    pspecs = SH.param_specs(mesh, cfg)
+    ospec = opt_specs(pspecs, state_struct["params"], opt_cfg)
+
+    def fn(params, grads, opt_state):
+        new_p, new_o, _ = OPT.apply_updates(params, grads, opt_state, opt_cfg)
+        return new_p, new_o
+
+    jfn = jax.jit(fn, in_shardings=(to_shardings(mesh, pspecs),
+                                    to_shardings(mesh, pspecs),
+                                    to_shardings(mesh, ospec)),
+                  donate_argnums=(0, 2))
+    comp = jfn.lower(state_struct["params"], grads_struct,
+                     state_struct["opt"]).compile()
+    out = _cost_of(comp)
+    del comp
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             cost_periods: bool = True, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not applicable(shape, cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic context "
+                          "(DESIGN.md §5)"}
+    kn = knobs(arch, shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16", "knobs": kn}
+    with mesh:
+        lowered, compiled, dt = compile_cell(cfg, shape, mesh, kn)
+        result["compile_seconds"] = dt
+        result["memory"] = AN.memory_summary(compiled)
+        result["cost_raw"] = AN.cost_summary(compiled)
+        hlo = compiled.as_text()
+        result["collectives_raw"] = AN.collective_bytes(hlo)
+        del lowered, compiled, hlo
+
+        if cost_periods:
+            result["cost"] = measure_cost(cfg, shape, mesh, kn)
+        else:
+            result["cost"] = {**result["cost_raw"],
+                              "collective_bytes":
+                                  result["collectives_raw"]["total"]}
+    if verbose:
+        mem = result["memory"]
+        print(f"[{arch} x {shape_name} @ {result['mesh']}] "
+              f"compile {dt:.1f}s  "
+              f"state {mem['argument_size_in_bytes'] / 2**30:.2f} GiB  "
+              f"temp<= {mem['temp_size_in_bytes'] / 2**30:.2f} GiB  "
+              f"peak {mem['peak_memory_in_bytes'] / 2**30:.2f} GiB  "
+              f"flops {result['cost']['flops']:.3e}  "
+              f"coll {result['cost']['collective_bytes']:.3e} B",
+              flush=True)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-cost-periods", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                res = run_cell(arch, shape, multi_pod=mp,
+                               cost_periods=not args.no_cost_periods
+                               and not mp)
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(res, f, indent=1)
+            except Exception as e:                        # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape, mp, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS COMPILED.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Mosaic pruning launcher: RC -> PC -> deployment-ready SLM checkpoint.
+
+  PYTHONPATH=src python -m repro.launch.prune --arch gemma-2b --smoke \
+      --p 0.6 --category composite --out results/pruned_gemma
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.common.tree import param_bytes, param_count
+from repro.configs.registry import get_config, get_smoke_config, list_archs
+from repro.core.prune_controller import Platform, run_pruning_controller
+from repro.core.rank_controller import run_ranking_controller
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import transformer as T
+
+PLATFORMS = {
+    "cloud": Platform("cloud", 80 << 30, has_sparse_accel=True, tp_size=16),
+    "edge": Platform("edge", 4 << 30),
+    "mobile": Platform("mobile", 8 << 30),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--p", type=float, required=True)
+    ap.add_argument("--category", default=None,
+                    choices=[None, "unstructured", "structured", "composite"])
+    ap.add_argument("--platform", default=None, choices=sorted(PLATFORMS))
+    ap.add_argument("--granularity", default="projection",
+                    choices=["global", "layer", "projection"])
+    ap.add_argument("--selector", default="wanda",
+                    choices=["magnitude", "wanda", "sparsegpt"])
+    ap.add_argument("--calib-samples", type=int, default=32)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(scan_layers=False)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    corpus = SyntheticCorpus(cfg.vocab, seed=0)
+    calib = corpus.calibration_batches(args.calib_samples, 8, 64)
+
+    print(f"RC: profiling {cfg.name} "
+          f"({param_count(params) / 1e6:.1f}M params)...")
+    art = run_ranking_controller(params, cfg, calib,
+                                 want_hessians=args.selector == "sparsegpt")
+    print(f"RC done in {art.profile_seconds:.1f}s over {art.n_tokens} tokens")
+
+    platform = PLATFORMS.get(args.platform) if args.platform else None
+    res = run_pruning_controller(params, cfg, art, args.p,
+                                 platform=platform, category=args.category,
+                                 granularity=args.granularity,
+                                 selector=args.selector, align_channels=8)
+    print(f"PC: category={res.category} granularity={res.granularity} "
+          f"in {res.prune_seconds:.1f}s")
+    print(f"params {param_count(params)} -> {param_count(res.params)}  "
+          f"bytes {param_bytes(params)} -> {param_bytes(res.params)}")
+    if args.out:
+        mgr = CheckpointManager(args.out, keep=1)
+        mgr.save(0, res.params, blocking=True,
+                 extra_meta={"category": res.category, "p": args.p})
+        print(f"saved pruned model to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation: the same pattern shannon/kernels uses — weak-type-
+correct structs that jit().lower() accepts directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models import transformer as T
+from repro.models.specs import ModelConfig
+from repro.train import optimizer as OPT
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_len(cfg: ModelConfig, seq: int) -> int:
+    return int(cfg.frontend_frac * seq) if cfg.frontend else 0
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                cache_dtype=jnp.bfloat16) -> dict:
+    """Returns the kwargs (as ShapeDtypeStructs) for the step function of
+    this shape kind."""
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "labels": sds((B, S), jnp.int32)}
+        F = frontend_len(cfg, S)
+        if F:
+            out["frontend_embeds"] = sds((B, F, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "cache": cache_specs_struct(cfg, B, S, cache_dtype)}
+        F = frontend_len(cfg, S)
+        if F:
+            out["frontend_embeds"] = sds((B, F, cfg.d_model), jnp.bfloat16)
+        return out
+    if shape.kind == "decode":
+        return {"cache": cache_specs_struct(cfg, B, S, cache_dtype),
+                "tokens": sds((B, 1), jnp.int32),
+                "cache_index": sds((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs_struct(cfg: ModelConfig, batch: int, s_max: int,
+                       dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, s_max, dtype=dtype))
+
+
+def param_struct(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: T.init_model(jax.random.PRNGKey(0), cfg, dtype=dtype))
+
+
+def train_state_struct(cfg: ModelConfig, opt_cfg: OPT.OptConfig,
+                       param_dtype=jnp.float32):
+    def build():
+        params = T.init_model(jax.random.PRNGKey(0), cfg, dtype=param_dtype)
+        return {"params": params, "opt": OPT.init_opt(params, opt_cfg)}
+    return jax.eval_shape(build)

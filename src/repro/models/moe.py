@@ -1,0 +1,120 @@
+"""Capacity-based top-k Mixture-of-Experts (GShard/Switch formulation).
+
+Gather/scatter dispatch with fixed per-expert capacity so the whole layer is
+a static-shape einsum program that XLA GSPMD can partition: experts shard
+over the ``model`` mesh axis (all-to-alls inserted automatically), tokens
+over ``data``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import hint
+from repro.models.specs import MoESpec
+from repro.models.layers import activation, init_mlp, apply_mlp
+from repro.models.specs import MLPSpec
+from repro.models.taps import tap
+
+
+def init_moe(key: jax.Array, d_model: int, spec: MoESpec, dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, F = spec.n_experts, spec.d_ff
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": (jax.random.normal(kr, (d_model, E)) * s_in).astype(dtype),
+        "up": (jax.random.normal(ku, (E, d_model, F)) * s_in).astype(dtype),
+        "down": (jax.random.normal(kd, (E, F, d_model)) * s_out).astype(dtype),
+    }
+    if spec.gated:
+        p["gate"] = (jax.random.normal(kg, (E, d_model, F)) * s_in).astype(dtype)
+    if spec.n_shared:
+        shared_spec = MLPSpec(d_ff=F * spec.n_shared, act=spec.act, gated=spec.gated)
+        p["shared"] = init_mlp(ks, d_model, shared_spec, dtype)
+    return p
+
+
+def capacity(spec: MoESpec, n_tokens: int) -> int:
+    c = int(math.ceil(spec.capacity_factor * spec.top_k * n_tokens / spec.n_experts))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def n_groups(B: int, S: int) -> int:
+    """Dispatch groups: align with the data-parallel batch sharding so the
+    per-group scatter/gather stays shard-local under GSPMD (no global
+    gather pathology). Groups follow the batch dim; tiny batches fall back
+    to a single group."""
+    return B
+
+
+def apply_moe(params: dict, spec: MoESpec, x: jax.Array):
+    """x: (B, S, d). Returns (y, aux_loss).
+
+    Grouped capacity dispatch (GShard/T5X style): tokens are routed within
+    their group only; scatter/gather carry a leading group batch-dim, so
+    XLA partitions them along 'data' instead of emitting global gathers.
+    """
+    dtype = x.dtype
+    B, S, d = x.shape
+    E, K = spec.n_experts, spec.top_k
+    G = n_groups(B, S)
+    s = (B * S) // G
+    C = capacity(spec, s)
+    xg = x.reshape(G, s, d)
+
+    logits = (xg @ params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G, s, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)         # (G, s, K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], E, dtype=jnp.float32),
+                  axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # Position of each (token, k) assignment within its expert, per group.
+    flat_ids = expert_ids.reshape(G, s * K)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)   # (G, sK, E)
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1  # (G, sK)
+    keep = pos < C
+    slot = jnp.where(keep, flat_ids * C + pos, E * C)       # drop -> last
+
+    # Dispatch: per-group scatter into (G, E*C+1, d) slot buffers.
+    src = jnp.repeat(xg, K, axis=1)                         # (G, sK, d)
+    buf = jax.vmap(lambda sl, sr: jnp.zeros((E * C + 1, d), dtype)
+                   .at[sl].add(sr))(slot, src)
+    slots = buf[:, :E * C].reshape(G, E, C, d)
+    slots = hint(slots, "batch", "experts", None, None)
+
+    # Expert FFN on (G, E, C, d)
+    tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
+    up = jnp.einsum("gecd,edf->gecf", slots, params["up"].astype(dtype))
+    if spec.gated:
+        g = activation(spec.act, jnp.einsum(
+            "gecd,edf->gecf", slots, params["gate"].astype(dtype)))
+        h = g * up
+    else:
+        h = activation(spec.act, up)
+    tap("moe_down", h, channel_axes=(1, 3), expert_first=True)
+    out_slots = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(dtype))
+    out_slots = hint(out_slots, "batch", "experts", None, None)
+
+    # Combine: per-group gather; dropped assignments contribute 0.
+    flat_out = out_slots.reshape(G, E * C, d)
+    gathered = jax.vmap(lambda fo, sl: jnp.take(
+        fo, sl, axis=0, mode="fill", fill_value=0))(
+        flat_out, jnp.where(keep, slot, -1))                # (G, sK, d)
+    gathered = gathered.reshape(G, s, K, d)
+    y = jnp.einsum("gskd,gsk->gsd", gathered, gate_vals.astype(dtype))
+
+    if "shared" in params:
+        shared_spec = MLPSpec(d_ff=params["shared"]["up"].shape[1],
+                              act=spec.act, gated=spec.gated)
+        y = y + apply_mlp(params["shared"], shared_spec,
+                          xg.reshape(G * s, d)).reshape(G, s, d)
+    return y.reshape(B, S, d), aux

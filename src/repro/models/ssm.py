@@ -1,0 +1,196 @@
+"""Mamba-2 (SSD, state-space duality) mixer — pure-JAX chunked algorithm.
+
+y_t = C_t · h_t,   h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T
+
+Computed chunk-wise (arXiv:2405.21060): quadratic attention-like intra-chunk
+term + linear inter-chunk state recurrence, so cost is O(L·Q) instead of
+O(L^2) and the whole thing is einsum/scan (GSPMD-partitionable). The Pallas
+hot-path kernel lives in repro/kernels/ssd_scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.axes import hint
+from repro.models.specs import MambaSpec
+from repro.models.taps import tap
+
+
+def init_mamba(key: jax.Array, d_model: int, spec: MambaSpec,
+               dtype=jnp.float32) -> dict:
+    ki, ko, kd = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(spec.d_inner)
+    H = spec.n_heads
+    # dt_bias: softplus^-1 of dt ~ U[1e-3, 0.1]
+    dt = jnp.exp(jax.random.uniform(kd, (H,)) *
+                 (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": (jax.random.normal(ki, (d_model, spec.in_dim)) * s_in).astype(dtype),
+        "conv_w": (jax.random.normal(ko, (spec.conv_dim, spec.d_conv)) *
+                   (1.0 / math.sqrt(spec.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), dtype),
+        "A_log": jnp.log(1.0 + jax.random.uniform(kd, (H,)) * 15.0).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((spec.d_inner,), dtype),
+        "out_proj": (jax.random.normal(ko, (spec.d_inner, d_model)) * s_out).astype(dtype),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. xbc: (B, L, C), w: (C, K). Returns (out, new_carry)."""
+    B, L, C = xbc.shape
+    K = w.shape[1]
+    if carry is None:
+        carry = jnp.zeros((B, K - 1, C), xbc.dtype)
+    full = jnp.concatenate([carry, xbc], axis=1)            # (B, L+K-1, C)
+    out = jnp.zeros((B, L, C), xbc.dtype)
+    for k in range(K):
+        out = out + full[:, k:k + L, :] * w[:, k].astype(xbc.dtype)
+    new_carry = full[:, L:, :]
+    return out + b.astype(xbc.dtype), new_carry
+
+
+def ssd_chunked(xt: jax.Array, da: jax.Array, Bm: jax.Array, Cm: jax.Array,
+                chunk: int, h0: Optional[jax.Array] = None):
+    """Chunked SSD core.
+
+    xt: (B, L, H, P) dt-scaled inputs; da: (B, L, H) log decays (dt*A, <=0);
+    Bm, Cm: (B, L, N) (single group, broadcast over heads).
+    Returns y: (B, L, H, P) and final state (B, H, P, N).
+    """
+    Bb, L_orig, H, P = xt.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L_orig)
+    pad = (-L_orig) % Q
+    if pad:
+        # zero-pad the tail: da=0 -> decay 1, xt=0 -> no state contribution
+        xt = jnp.pad(xt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    L = L_orig + pad
+    nc = L // Q
+    f32 = jnp.float32
+
+    xt_c = xt.reshape(Bb, nc, Q, H, P)
+    da_c = da.reshape(Bb, nc, Q, H).astype(f32)
+    B_c = Bm.reshape(Bb, nc, Q, N)
+    C_c = Cm.reshape(Bb, nc, Q, N)
+
+    Lc = jnp.cumsum(da_c, axis=2)                           # (B,nc,Q,H)
+    seg = jnp.exp(Lc[:, :, :, None, :] - Lc[:, :, None, :, :])   # (B,nc,Q,Q,H)
+    idx = jnp.arange(Q)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    seg = jnp.where(causal, seg, 0.0)
+
+    CB = jnp.einsum("bcin,bcjn->bcij", C_c, B_c,
+                    preferred_element_type=f32)             # (B,nc,Q,Q)
+    scores = CB[..., None] * seg                            # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(xt.dtype), xt_c)
+
+    # Per-chunk end states
+    decay_end = jnp.exp(Lc[:, :, -1:, :] - Lc)              # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        decay_end, B_c.astype(f32), xt_c.astype(f32))
+
+    # Inter-chunk recurrence
+    chunk_decay = jnp.exp(Lc[:, :, -1, :])                  # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), f32)
+
+    def step(h, inp):
+        dec, s = inp                                        # (B,H), (B,H,P,N)
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h
+
+    chunk_decay_t = jnp.moveaxis(chunk_decay, 1, 0)         # (nc,B,H)
+    states_t = jnp.moveaxis(states, 1, 0)                   # (nc,B,H,P,N)
+    h_final, h_prev = jax.lax.scan(step, h0.astype(f32),
+                                   (chunk_decay_t, states_t))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         C_c.astype(f32), h_prev, jnp.exp(Lc)).astype(xt.dtype)
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    if pad:
+        y = y[:, :L_orig]
+    return y, h_final
+
+
+def apply_mamba(params: dict, spec: MambaSpec, x: jax.Array,
+                cache: Optional[dict] = None):
+    """x: (B, L, d_model). cache: {'conv': (B,K-1,conv_dim), 'state': (B,H,P,N)}.
+
+    Returns (out, new_cache)."""
+    dtype = x.dtype
+    B, L, _ = x.shape
+    H, P, N = spec.n_heads, spec.head_dim, spec.d_state
+    di = spec.d_inner
+
+    tap("mamba_in", x)
+    zxbcdt = hint(x @ params["in_proj"].astype(dtype),
+                  "batch", "seq", "inner")                  # (B,L,in_dim)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + spec.conv_dim]
+    dt_raw = zxbcdt[..., di + spec.conv_dim:]               # (B,L,H)
+
+    conv_carry = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_carry)
+    xbc = jax.nn.silu(xbc)
+    xs = hint(xbc[..., :di].reshape(B, L, H, P),
+              "batch", "seq", "heads", "head_dim")
+    Bm = xbc[..., di:di + N]                                # (B,L,N) (groups=1)
+    Cm = xbc[..., di + N:di + 2 * N]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                           # (H,) < 0
+    da = dt * A                                             # (B,L,H)
+    xt = xs * dt[..., None].astype(dtype)
+
+    if cache is not None and L == 1:
+        # single-step decode recurrence
+        h = cache["state"]                                  # (B,H,P,N) f32
+        dec = jnp.exp(da[:, 0, :])                          # (B,H)
+        upd = jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32),
+                         xt[:, 0].astype(jnp.float32))
+        h = h * dec[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y[:, None].astype(dtype)                        # (B,1,H,P)
+        new_state = h
+    else:
+        h0 = cache["state"] if cache is not None else None
+        y, new_state = ssd_chunked(xt, da, Bm, Cm, spec.chunk, h0)
+
+    y = y + params["D"].astype(dtype)[None, None, :, None] * xs
+    y = hint(y, "batch", "seq", "heads", "head_dim")
+    y = y.reshape(B, L, di)
+
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)).astype(dtype)
+    y = y * params["norm_scale"].astype(dtype)
+    tap("mamba_out", y)
+    out = hint(y @ params["out_proj"].astype(dtype), "batch", "seq", "embed")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "state": new_state}
+    return out, new_cache
+
+
+def init_mamba_cache(batch: int, spec: MambaSpec, dtype=jnp.bfloat16) -> dict:
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.conv_dim), dtype),
+        "state": jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state),
+                           jnp.float32),
+    }

@@ -1,0 +1,65 @@
+"""Activation taps: capture per-input-channel sum-of-squares at every
+projection input during a forward pass (the ``||A||_2`` term of Eq. 5).
+
+Layer applies call :func:`tap`; a collector is active only inside
+``collecting()``. Because taps are appended during a single jit trace and
+returned from the same trace, this is jit-safe.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+_COLLECTOR: Optional[list] = None
+_MODE: str = "ssq"
+
+
+def tap(name: str, x, channel_axes=(-1,), expert_first: bool = False) -> None:
+    """Record a statistic of ``x`` over all non-channel axes.
+
+    mode 'ssq': per-channel sum of squares (-> ||A||_2 for Eq. 5).
+    mode 'hessian': X^T X over flattened channel axes (SparseGPT).
+    channel_axes: axes kept (the projection's input-feature axes); all
+    other axes (batch / seq / capacity) are reduced. expert_first: the
+    first channel axis is a category (per-expert stats), not a feature.
+    """
+    if _COLLECTOR is None:
+        return
+    keep = sorted(a % x.ndim for a in channel_axes)
+    reduce_axes = tuple(a for a in range(x.ndim) if a not in keep)
+    x32 = x.astype(jnp.float32)
+    if _MODE == "ssq":
+        stat = jnp.sum(jnp.square(x32), axis=reduce_axes)
+    else:
+        if expert_first:
+            # per-expert Hessian: (..., E, ..., d) -> (E, d, d)
+            e_ax, feat_axes = keep[0], keep[1:]
+            xe = jnp.moveaxis(x32, e_ax, 0)
+            feat_axes = [a if a < e_ax else a for a in feat_axes]
+            dims = 1
+            for a in keep[1:]:
+                dims *= x.shape[a]
+            # move feature axes last, flatten the middle
+            xe = jnp.moveaxis(xe, -1, -1)
+            flat = xe.reshape(xe.shape[0], -1, dims)
+            stat = jnp.einsum("ecd,ecf->edf", flat, flat)
+        else:
+            dims = 1
+            for a in keep:
+                dims *= x.shape[a]
+            flat = x32.reshape(-1, dims)
+            stat = flat.T @ flat
+    _COLLECTOR.append((name, stat))
+
+
+@contextlib.contextmanager
+def collecting(mode: str = "ssq"):
+    global _COLLECTOR, _MODE
+    prev, prev_mode = _COLLECTOR, _MODE
+    _COLLECTOR, _MODE = [], mode
+    try:
+        yield _COLLECTOR
+    finally:
+        _COLLECTOR, _MODE = prev, prev_mode

@@ -1,0 +1,76 @@
+"""Serving: prefill + decode steps and a batched generation engine.
+
+``make_serve_step`` is the artifact the decode/long dry-run shapes lower:
+one new token against a KV cache of S_max, cache updated in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.specs import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    def prefill_step(params, tokens, cache, frontend_embeds=None):
+        logits, cache, _ = T.forward(
+            params, cfg, tokens, frontend_embeds=frontend_embeds,
+            cache=cache, cache_index=jnp.zeros((), jnp.int32),
+            compute_dtype=compute_dtype)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    def serve_step(params, cache, tokens, cache_index):
+        """tokens: (B, 1) — decode one token for every sequence."""
+        logits, cache, _ = T.forward(
+            params, cfg, tokens, cache=cache, cache_index=cache_index,
+            compute_dtype=compute_dtype)
+        return logits[:, -1, :], cache
+    return serve_step
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0,
+                 vocab: Optional[int] = None) -> jax.Array:
+    if vocab is not None and vocab < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(mask, -1e30, logits)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1
+                                  ).astype(jnp.int32)
+
+
+class Engine:
+    """Minimal batched generation engine over the functional steps."""
+
+    def __init__(self, params, cfg: ModelConfig, max_seq: int,
+                 compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        self.prefill_step = jax.jit(make_prefill_step(cfg, compute_dtype))
+        self.serve_step = jax.jit(make_serve_step(cfg, compute_dtype))
+
+    def generate(self, prompt_tokens, n_new: int, temperature: float = 0.0,
+                 seed: int = 0):
+        """prompt_tokens: (B, S0) -> (B, S0 + n_new)."""
+        B, S0 = prompt_tokens.shape
+        cache = T.init_cache(self.cfg, B, self.max_seq, self.cache_dtype)
+        logits, cache = self.prefill_step(self.params, prompt_tokens, cache)
+        key = jax.random.PRNGKey(seed)
+        tok = sample_token(logits[:, -1, :], key, temperature, self.cfg.vocab)
+        out = [prompt_tokens, tok[:, None]]
+        for i in range(n_new - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self.serve_step(
+                self.params, cache, tok[:, None], jnp.int32(S0 + i))
+            tok = sample_token(logits, sub, temperature, self.cfg.vocab)
+            out.append(tok[:, None])
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,130 @@
+"""AdamW from scratch (no optax), with:
+  - linear-warmup + cosine-decay schedule
+  - global-norm gradient clipping
+  - optional factored second moment (Adafactor-style) so 340B-scale
+    optimizer state fits a single pod (DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    factored: bool = False       # factored v for >=2D leaves
+    m_dtype: str = "float32"     # bf16 halves momentum memory at 340B scale
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    decay_steps = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / decay_steps, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factorable(x) -> bool:
+    return x.ndim >= 2 and x.shape[-1] >= 2 and x.shape[-2] >= 2
+
+
+def init_opt(params, cfg: OptConfig) -> dict:
+    m_dtype = jnp.dtype(cfg.m_dtype)
+    m = jax.tree.map(lambda x: jnp.zeros_like(x, m_dtype), params)
+    if cfg.factored:
+        def init_v(x):
+            if _factorable(x):
+                return {"row": jnp.zeros(x.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(x.shape[:-2] + x.shape[-1:],
+                                         jnp.float32)}
+            return {"full": jnp.zeros_like(x, jnp.float32)}
+        v = jax.tree.map(init_v, params)
+    else:
+        v = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def _vhat_full(v, g2, b2):
+    return b2 * v + (1 - b2) * g2
+
+
+def apply_updates(params, grads, opt_state: dict, cfg: OptConfig):
+    """One AdamW step. Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    if cfg.clip_norm:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    m_dtype = jnp.dtype(cfg.m_dtype)
+    new_m = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g.astype(jnp.float32)).astype(m_dtype),
+        opt_state["m"], grads)
+
+    is_v_leaf = lambda x: isinstance(x, dict) and (
+        "full" in x or "row" in x)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        if cfg.factored:
+            if _factorable(p):
+                row = _vhat_full(v["row"], jnp.mean(jnp.square(g32), -1), cfg.b2)
+                col = _vhat_full(v["col"], jnp.mean(jnp.square(g32), -2), cfg.b2)
+                new_v = {"row": row, "col": col}
+                denom = jnp.sqrt(
+                    (row[..., :, None] * col[..., None, :]) /
+                    jnp.maximum(jnp.mean(row, -1, keepdims=True)[..., None],
+                                1e-30) / b2c) + cfg.eps
+            else:
+                full = _vhat_full(v["full"], jnp.square(g32), cfg.b2)
+                new_v = {"full": full}
+                denom = jnp.sqrt(full / b2c) + cfg.eps
+        else:
+            new_v = _vhat_full(v, jnp.square(g32), cfg.b2)
+            denom = jnp.sqrt(new_v / b2c) + cfg.eps
+        mhat = m.astype(jnp.float32) / b1c
+        delta = mhat / denom + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(new_m)
+    flat_v = treedef.flatten_up_to(opt_state["v"]) if cfg.factored \
+        else jax.tree.leaves(opt_state["v"])
+    new_p, new_v = zip(*[upd(p, g, m, v) for p, g, m, v in
+                         zip(flat_p, flat_g, flat_m, flat_v)])
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_vt = jax.tree.unflatten(treedef, new_v)
+    new_state = {"m": new_m, "v": new_vt, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,120 @@
+"""Train step: loss + grad with microbatch accumulation and remat.
+
+Gradient accumulation serves two purposes at scale: activation memory
+(global_batch 256 x 4k tokens never lives at once) and compute/comm
+overlap (per-microbatch reduce-scatter overlaps the next microbatch's
+backward under XLA's latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.specs import ModelConfig
+from repro.train import optimizer as OPT
+
+
+def make_loss_fn(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                 aux_weight: float = 0.01, mesh=None, param_specs=None):
+    def cast_params(params):
+        # cast fp32 masters to compute dtype *before* the FSDP all-gathers
+        # so collectives move bf16, not fp32 (2x ICI traffic saved); the
+        # cast is differentiable so grads land back on the fp32 masters.
+        # The explicit sharding constraint keeps the convert shard-local —
+        # without it GSPMD gathers fp32 and converts afterwards.
+        def one(x, spec=None):
+            if not jnp.issubdtype(x.dtype, jnp.floating):
+                return x
+            y = x.astype(compute_dtype)
+            if mesh is not None and spec is not None:
+                from jax.sharding import NamedSharding
+                y = jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, spec))
+            return y
+        if param_specs is not None:
+            from jax.sharding import PartitionSpec as P
+            return jax.tree.map(one, params, param_specs,
+                                is_leaf=lambda x: hasattr(x, "dtype"))
+        return jax.tree.map(one, params)
+
+    def loss_fn(params, tokens, labels, frontend_embeds=None):
+        params = cast_params(params)
+        return T.loss_fn(params, cfg, tokens, labels,
+                         frontend_embeds=frontend_embeds,
+                         compute_dtype=compute_dtype, aux_weight=aux_weight)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OPT.OptConfig,
+                    n_microbatches: int = 1,
+                    compute_dtype=jnp.bfloat16,
+                    aux_weight: float = 0.01,
+                    mesh=None, batch_spec=None,
+                    accum_dtype=jnp.float32, param_specs=None):
+    """Returns train_step(state, tokens, labels) -> (state, metrics).
+
+    state = {'params': ..., 'opt': ...}. When n_microbatches > 1 the batch
+    is split on the leading axis and gradients accumulate in fp32.
+    """
+    loss_fn = make_loss_fn(cfg, compute_dtype, aux_weight, mesh=mesh,
+                           param_specs=param_specs)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_micro(x):
+        if mesh is None or batch_spec is None:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(*((None,) + tuple(batch_spec)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def train_step(state, tokens, labels, frontend_embeds=None):
+        params = state["params"]
+        if n_microbatches == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, tokens, labels,
+                                               frontend_embeds)
+        else:
+            B = tokens.shape[0]
+            assert B % n_microbatches == 0
+            mb = B // n_microbatches
+            tok = constrain_micro(
+                tokens.reshape(n_microbatches, mb, *tokens.shape[1:]))
+            lab = constrain_micro(
+                labels.reshape(n_microbatches, mb, *labels.shape[1:]))
+            fe = None
+            if frontend_embeds is not None:
+                fe = constrain_micro(frontend_embeds.reshape(
+                    n_microbatches, mb, *frontend_embeds.shape[1:]))
+            zeros = jax.tree.map(
+                lambda x: jnp.zeros(x.shape, accum_dtype), params)
+
+            def body(carry, xs):
+                gacc, lacc, ceacc, auxacc = carry
+                t, l, f = xs
+                (lo, (ce_i, aux_i)), g = grad_fn(params, t, l, f)
+                gacc = jax.tree.map(
+                    lambda a, b: (a.astype(jnp.float32)
+                                  + b.astype(jnp.float32) / n_microbatches
+                                  ).astype(accum_dtype),
+                    gacc, g)
+                return (gacc, lacc + lo / n_microbatches,
+                        ceacc + ce_i / n_microbatches,
+                        auxacc + aux_i / n_microbatches), None
+
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0, 0.0), (tok, lab, fe))
+        new_params, new_opt, stats = OPT.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **stats}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, opt_cfg: OPT.OptConfig,
+                     param_dtype=jnp.float32) -> dict:
+    params = T.init_model(key, cfg, dtype=param_dtype)
+    return {"params": params, "opt": OPT.init_opt(params, opt_cfg)}

@@ -1,0 +1,97 @@
+"""Training loop: data prefetch, checkpoint/restart, preemption handling,
+straggler monitoring. The production driver behind launch/train.py and the
+E4/E5 benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import Prefetcher
+from repro.distributed.fault import PreemptionHandler, StragglerMonitor
+from repro.models.specs import ModelConfig
+from repro.train import optimizer as OPT
+from repro.train.train_step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_run: int
+    final_step: int
+    losses: list
+    step_seconds: list
+    stragglers: list
+    preempted: bool
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: OPT.OptConfig,
+                 data_it: Iterator, ckpt: Optional[CheckpointManager] = None,
+                 ckpt_every: int = 100, n_microbatches: int = 1,
+                 compute_dtype=None, seed: int = 0,
+                 log_fn: Optional[Callable] = None,
+                 prefetch: bool = True, mesh=None, batch_spec=None,
+                 async_checkpoint: bool = True):
+        import jax.numpy as jnp
+        compute_dtype = compute_dtype or jnp.bfloat16
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.async_checkpoint = async_checkpoint
+        self.log_fn = log_fn or (lambda *_: None)
+        self.data = Prefetcher(data_it) if prefetch else data_it
+        self.train_step = jax.jit(make_train_step(
+            cfg, opt_cfg, n_microbatches=n_microbatches,
+            compute_dtype=compute_dtype, mesh=mesh, batch_spec=batch_spec),
+            donate_argnums=(0,))
+        self.state = init_train_state(jax.random.PRNGKey(seed), cfg, opt_cfg)
+        self.step = 0
+        self.preemption = PreemptionHandler().install()
+        self.straggler = StragglerMonitor()
+        if ckpt is not None and ckpt.latest_step() is not None:
+            self.state = ckpt.restore(self.state)
+            self.step = ckpt.meta()["step"]
+
+    def run(self, n_steps: int) -> TrainReport:
+        losses, times = [], []
+        preempted = False
+        target = self.step + n_steps
+        while self.step < target:
+            try:
+                tokens, labels = next(self.data)
+            except StopIteration:
+                break
+            t0 = time.perf_counter()
+            self.state, metrics = self.train_step(self.state, tokens, labels)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step += 1
+            losses.append(loss)
+            times.append(dt)
+            self.straggler.record(self.step, dt)
+            self.log_fn(self.step, metrics)
+            if self.ckpt and self.step % self.ckpt_every == 0:
+                self._save()
+            if self.preemption.should_stop:
+                self._save()
+                preempted = True
+                break
+        if self.ckpt:
+            self._save()
+            self.ckpt.wait()
+        return TrainReport(steps_run=len(losses), final_step=self.step,
+                           losses=losses, step_seconds=times,
+                           stragglers=list(self.straggler.flagged),
+                           preempted=preempted)
+
+    def _save(self) -> None:
+        if self.ckpt:
+            self.ckpt.save(self.step, self.state,
+                           blocking=not self.async_checkpoint,
+                           extra_meta={"step": self.step})

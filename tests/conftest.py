@@ -1,0 +1,35 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
+                                ModelConfig, MoESpec)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def small_config(scan=False, moe=False, mamba=False, vocab=256) -> ModelConfig:
+    attn = AttentionSpec(n_q=4, n_kv=2, head_dim=16)
+    mlp = MLPSpec(d_ff=128)
+    layers = [LayerSpec(attn, mlp)]
+    if moe:
+        layers.append(LayerSpec(attn, MoESpec(n_experts=4, top_k=2, d_ff=64)))
+    if mamba:
+        layers.append(LayerSpec(
+            MambaSpec(d_inner=128, d_state=16, head_dim=16, chunk=8), None))
+    return ModelConfig(name="test", d_model=64, vocab=vocab,
+                       vocab_pad_multiple=16, pattern=tuple(layers),
+                       n_periods=2, scan_layers=scan, remat=False)
+
+
+@pytest.fixture(scope="session")
+def hybrid_cfg():
+    return small_config(moe=True, mamba=True)
+
+
+@pytest.fixture(scope="session")
+def dense_cfg():
+    return small_config()

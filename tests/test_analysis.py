@@ -1,0 +1,52 @@
+"""Unit tests for the dry-run analysis layer (HLO collective parsing,
+roofline terms, extrapolation)."""
+import pytest
+
+from repro.launch import analysis as AN
+
+
+HLO_SAMPLE = """
+HloModule jit_step
+  %ag = bf16[128,256] all-gather(%p0), dimensions={0}
+  %ar.1 = f32[1024] all-reduce(%x), to_apply=%add
+  %rs = bf16[64,64]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[32,32] all-to-all(%z), dimensions={1}
+  %cp = s32[16] collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[8,8], bf16[8,8]) all-gather-start(%q), dimensions={0}
+  %agd = bf16[8,8] all-gather-done(%ags)
+  %dot = f32[128,128] dot(%a, %b), lhs_contracting_dims={1}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    out = AN.collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 128 * 256 * 2 + 2 * 8 * 8 * 2  # incl. -start tuple
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 64 * 64 * 2
+    assert out["all-to-all"] == 32 * 32 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == sum(out[k] for k in AN.COLLECTIVES)
+
+
+def test_done_ops_not_double_counted():
+    out = AN.collective_bytes(HLO_SAMPLE)
+    # the -done op carries the same bytes; only -start is counted
+    assert out["counts"]["all-gather"] == 2
+
+
+def test_roofline_terms_and_bottleneck():
+    t = AN.roofline_terms(flops=197e12, bytes_accessed=819e9,
+                          coll_bytes=0.0, n_chips=256)
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(1.0)
+    t2 = AN.roofline_terms(flops=1.0, bytes_accessed=1.0,
+                           coll_bytes=50e9, n_chips=256)
+    assert t2["bottleneck"] == "collective_s"
+
+
+def test_extrapolate_affine():
+    c1 = {"flops": 10.0, "nested": {"x": 1.0}}
+    c2 = {"flops": 14.0, "nested": {"x": 1.5}}
+    out = AN.extrapolate(c1, c2, n_periods=5)
+    assert out["flops"] == pytest.approx(10 + 4 * 4)
+    assert out["nested"]["x"] == pytest.approx(1 + 4 * 0.5)

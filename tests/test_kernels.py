@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_sparse.ops import (block_mask_from_weight_mask,
+                                            blocksparse_matmul, plan_blocks)
+from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.ssd_scan.ops import ssd_apply
+from repro.kernels.wanda_metric.ops import outlier_ratio as kernel_outlier
+from repro.kernels.wanda_metric.ref import outlier_ratio_ref
+from repro.models.layers import _dense_attention
+from repro.models.ssm import ssd_chunked
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", [(256, 512, 384), (128, 256, 128),
+                                 (384, 384, 256)])
+def test_block_sparse_matmul(dtype, mkn):
+    M, K, N = mkn
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(ks[0], (M, K)).astype(dtype)
+    w = jax.random.normal(ks[1], (K, N)).astype(dtype)
+    mask = np.array(jax.random.uniform(ks[2], (K, N)) > 0.7)
+    mask[:128, :128] = False                       # force a zero block
+    w = jnp.where(jnp.asarray(mask), w, 0).astype(dtype)
+    bm = block_mask_from_weight_mask(mask, 128, 128)
+    counts, idx = plan_blocks(bm)
+    y = blocksparse_matmul(x, w, counts, idx, interpret=True)
+    yref = block_sparse_matmul_ref(x, w, jnp.asarray(bm), 128, 128)
+    err = jnp.abs(y.astype(jnp.float32) - yref.astype(jnp.float32)).max()
+    scale = jnp.abs(yref.astype(jnp.float32)).max() + 1e-9
+    assert float(err / scale) < TOL[dtype]
+
+
+def test_block_sparse_skips_zero_blocks():
+    mask = np.zeros((256, 256), bool)
+    mask[:128, :128] = True
+    bm = block_mask_from_weight_mask(mask, 128, 128)
+    counts, idx = plan_blocks(bm)
+    assert counts.tolist() == [1, 0]               # column 1 fully skipped
+    x = jnp.ones((128, 256))
+    w = jnp.ones((256, 256)) * jnp.asarray(mask)
+    y = blocksparse_matmul(x, w, counts, idx, interpret=True)
+    assert float(jnp.abs(y[:, 128:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("shape", [(512, 768), (256, 256), (1024, 512)])
+def test_wanda_outlier_kernel(shape):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    K, N = shape
+    spikes = (jax.random.uniform(k2, shape) > 0.995).astype(jnp.float32)
+    w = jax.random.normal(k1, shape) * (1 + 20 * spikes)
+    a = jnp.abs(jax.random.normal(k2, (K,))) + 0.1
+    r_k = float(kernel_outlier(w, a, alpha=5.0, interpret=True))
+    r_r = float(outlier_ratio_ref(w, a, 5.0))
+    assert r_k == pytest.approx(r_r, abs=1e-4)
+
+
+@pytest.mark.parametrize("dims", [(2, 64, 3, 16, 8, 16),
+                                  (1, 128, 2, 32, 16, 32),
+                                  (2, 96, 1, 16, 8, 32)])
+def test_ssd_scan_kernel(dims):
+    B, L, H, P, N, chunk = dims
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xt = jax.random.normal(ks[0], (B, L, H, P))
+    da = -jnp.abs(jax.random.normal(ks[1], (B, L, H))) * 0.1
+    Bm = jax.random.normal(ks[2], (B, L, N))
+    Cm = jax.random.normal(ks[3], (B, L, N))
+    y_k = ssd_apply(xt, da, Bm, Cm, chunk=chunk, interpret=True)
+    y_r, _ = ssd_chunked(xt, da, Bm, Cm, chunk)
+    scale = float(jnp.abs(y_r).max()) + 1e-9
+    assert float(jnp.abs(y_k - y_r).max() / scale) < 1e-5
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_kernel(hq, hkv, dtype):
+    B, S, D = 2, 512, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, hq, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, hkv, D)).astype(dtype)
+    o_k = flash_attention_bshd(q, k, v, block_q=128, block_k=128,
+                               interpret=True)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o_r = _dense_attention(q, k, v, pos, pos, causal=True)
+    err = jnp.abs(o_k.astype(jnp.float32) - o_r.astype(jnp.float32)).max()
+    assert float(err) < (5e-6 if dtype == jnp.float32 else 3e-2)

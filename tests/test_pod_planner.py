@@ -1,0 +1,99 @@
+"""POD (Eqs. 5-6) and Projection Planner (Eqs. 1-2) invariants —
+unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner as PL
+from repro.core import pod
+from repro.core.calibrate import activation_norms, calibrate
+from repro.core.rank_controller import run_ranking_controller
+from repro.core.registry import projections
+from repro.models import transformer as T
+from tests.conftest import small_config
+
+
+def test_outlier_ratio_known_case():
+    # 99 ones and 1 thousand: mean ~10.99; alpha=5 -> only the big one
+    m = jnp.concatenate([jnp.ones(99), jnp.array([1000.0])]).reshape(10, 10)
+    r = float(pod.outlier_ratio(m, alpha=5.0))
+    assert r == pytest.approx(1.0)
+
+
+def test_weight_metric_matches_eq5():
+    from repro.core.registry import Projection
+    w = jnp.array([[1.0, -2.0], [3.0, -4.0]])
+    anorm = jnp.array([2.0, 0.5])
+    proj = Projection(0, "up", ("x",), "mlp_in", (0,))
+    m = pod.weight_metric(w, anorm, proj)
+    np.testing.assert_allclose(m, [[2.0, 4.0], [1.5, 2.0]])
+
+
+def test_global_rank_normalised_mean_one():
+    cfg = small_config(moe=True, mamba=True)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batches = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0,
+                                  cfg.vocab) for i in range(2)]
+    art = run_ranking_controller(params, cfg, batches)
+    vals = [np.mean(v) for v in art.rank.values()]
+    assert np.mean(vals) == pytest.approx(1.0, rel=1e-6)
+    assert set(art.rank) == {p.key for p in projections(cfg)}
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=3, max_size=40),
+       st.floats(0.05, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_planner_mean_and_bounds(ranks, p):
+    rank = {(i, "up"): r for i, r in enumerate(ranks)}
+    rank = pod.normalize_rank(rank)
+    targets = PL.plan_targets(rank, p)
+    vals = np.array(list(targets.values()))
+    assert abs(vals.mean() - p) < 1e-6          # Eq. 1/2 hold exactly
+    assert (vals >= 0).all() and (vals <= PL.MAX_TARGET).all()
+
+
+@given(st.floats(0.05, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_planner_monotone(p):
+    rank = pod.normalize_rank({(0, "a"): 1.0, (1, "a"): 2.0, (2, "a"): 4.0})
+    t = PL.plan_targets(rank, p)
+    # more outliers (higher rank) => pruned less
+    assert t[(0, "a")] >= t[(1, "a")] >= t[(2, "a")]
+
+
+def test_planner_weighted_mean():
+    rank = pod.normalize_rank({(0, "a"): 1.0, (1, "a"): 3.0})
+    weights = {(0, "a"): 100.0, (1, "a"): 300.0}
+    t = PL.plan_targets(rank, 0.5, weights=weights)
+    wmean = (t[(0, "a")] * 100 + t[(1, "a")] * 300) / 400
+    assert wmean == pytest.approx(0.5, abs=1e-9)
+
+
+def test_granularities():
+    rank = pod.normalize_rank({(0, "q"): 1.0, (0, "up"): 2.0,
+                               (1, "q"): 3.0, (1, "up"): 4.0})
+    g = PL.plan(rank, 0.4, "global")
+    assert set(g.values()) == {0.4}
+    l = PL.plan(rank, 0.4, "layer")
+    assert l[(0, "q")] == l[(0, "up")]       # per-layer uniform
+    assert l[(0, "q")] != l[(1, "q")]
+    pr = PL.plan(rank, 0.4, "projection")
+    assert len(set(pr.values())) == 4
+
+
+def test_calibration_accumulates_ssq():
+    cfg = small_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    b = [jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)]
+    stats, n = calibrate(params, cfg, b)
+    assert n == 16
+    anorms = activation_norms(stats)
+    a = anorms[(0, "attn_qkv")]
+    assert a.shape == (cfg.d_model,)
+    assert bool(jnp.all(a >= 0))
+    # two identical batches double the sumsq -> sqrt(2) scaling
+    stats2, _ = calibrate(params, cfg, b + b)
+    np.testing.assert_allclose(activation_norms(stats2)[(0, "attn_qkv")],
+                               a * np.sqrt(2), rtol=1e-6)

@@ -1,0 +1,106 @@
+"""End-to-end system behaviour: train -> rank -> prune (all categories)
+-> eval perplexity -> LoRA recovery; the Mosaic pipeline on a real (small)
+learned model."""
+import math
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lora import init_lora, merge_lora
+from repro.core.rank_controller import run_ranking_controller
+from repro.core.prune_controller import run_pruning_controller
+from repro.data.pipeline import SyntheticCorpus
+from repro.models import transformer as T
+from repro.serve.engine import Engine
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import Trainer
+from tests.conftest import small_config
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = small_config(vocab=256)
+    corpus = SyntheticCorpus(256, seed=0)
+    opt = OptConfig(lr=2e-3, warmup_steps=10, total_steps=150)
+    tr = Trainer(cfg, opt, corpus.batches(16, 64), ckpt=None,
+                 compute_dtype=jnp.float32, prefetch=False)
+    rep = tr.run(120)
+    assert rep.losses[-1] < rep.losses[0]        # it learned something
+    return cfg, tr.state["params"], corpus
+
+
+def _ppl(params, cfg, corpus, n=4):
+    tot = 0.0
+    for tokens, labels in corpus.batches(8, 64, start=500, n=n):
+        logits, _, _ = T.forward(params, cfg, tokens,
+                                 compute_dtype=jnp.float32)
+        tot += float(T.cross_entropy(logits, labels, cfg.vocab))
+    return math.exp(tot / n)
+
+
+def test_train_prune_eval_pipeline(trained):
+    cfg, params, corpus = trained
+    base_ppl = _ppl(params, cfg, corpus)
+    assert base_ppl < 150                        # well below vocab=256
+
+    calib = corpus.calibration_batches(8, 4, 64)
+    art = run_ranking_controller(params, cfg, calib)
+
+    ppls = {}
+    for cat in ("unstructured", "composite", "structured"):
+        res = run_pruning_controller(params, cfg, art, 0.3, category=cat,
+                                     align_channels=8)
+        ppls[cat] = _ppl(res.params, res.cfg, corpus)
+        assert np.isfinite(ppls[cat])
+    # quality ordering at a moderate target: unstructured <= composite
+    # <= structured (paper E3), with slack for small-model noise
+    assert ppls["unstructured"] <= ppls["composite"] * 1.5
+    assert ppls["composite"] <= ppls["structured"] * 1.5
+    assert base_ppl <= ppls["unstructured"] * 1.05
+
+
+def test_generation_after_pruning(trained):
+    cfg, params, corpus = trained
+    calib = corpus.calibration_batches(4, 4, 32)
+    art = run_ranking_controller(params, cfg, calib)
+    res = run_pruning_controller(params, cfg, art, 0.3,
+                                 category="composite", align_channels=8)
+    eng = Engine(res.params, res.cfg, max_seq=32,
+                 compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+    prompt = jnp.asarray(corpus.batch(900, 2, 8)[:, :8])
+    out = eng.generate(prompt, n_new=8)
+    assert out.shape == (2, 16)
+    assert bool(jnp.all(out < cfg.vocab))
+
+
+def test_lora_recovery_improves_pruned_model(trained):
+    cfg, params, corpus = trained
+    calib = corpus.calibration_batches(4, 4, 32)
+    art = run_ranking_controller(params, cfg, calib)
+    res = run_pruning_controller(params, cfg, art, 0.5,
+                                 category="unstructured")
+    pruned_ppl = _ppl(res.params, res.cfg, corpus)
+
+    # train only the adapter for a few steps
+    adapters = init_lora(jax.random.PRNGKey(1), res.params, res.cfg, rank=4)
+
+    def loss(ad, tokens, labels):
+        merged = merge_lora(res.params, res.cfg, ad, rank=4)
+        l, _ = T.loss_fn(merged, res.cfg, tokens, labels,
+                         compute_dtype=jnp.float32)
+        return l
+
+    from repro.train.optimizer import OptConfig, init_opt, apply_updates
+    ocfg = OptConfig(lr=5e-3, warmup_steps=5, total_steps=60,
+                     weight_decay=0.0)
+    ostate = init_opt(adapters, ocfg)
+    gfn = jax.jit(jax.value_and_grad(loss))
+    for tokens, labels in corpus.batches(16, 64, start=200, n=40):
+        _, g = gfn(adapters, tokens, labels)
+        adapters, ostate, _ = apply_updates(adapters, g, ostate, ocfg)
+    recovered = merge_lora(res.params, res.cfg, adapters, rank=4)
+    rec_ppl = _ppl(recovered, res.cfg, corpus)
+    assert rec_ppl < pruned_ppl                  # E4: recovery works
