@@ -8,10 +8,9 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from benchmarks.common import (get_trained_model, perplexity, rank_artifact,
-                               SEQ)
+from benchmarks.common import (get_trained_model, perplexity,
+                               rank_artifact)
 from repro.core.prune_controller import run_pruning_controller
 
 

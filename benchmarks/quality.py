@@ -6,7 +6,6 @@ target distributions).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (accuracy, get_trained_model, perplexity,
                                rank_artifact)

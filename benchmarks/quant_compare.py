@@ -8,7 +8,6 @@ overhead we do not model on CPU, so we report compute bytes instead).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (accuracy, get_trained_model, perplexity,
                                rank_artifact)

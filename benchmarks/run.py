@@ -7,9 +7,14 @@ from __future__ import annotations
 
 import argparse
 import io
+import os
 import sys
 import time
 from contextlib import redirect_stdout
+
+# make `python benchmarks/run.py` work from anywhere: the repo root (for
+# the `benchmarks` package) must be importable alongside src (for repro)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def _timed(name: str, fn, *args, **kw):
@@ -26,11 +31,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full sparsity sweeps (slower)")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--csv", default=None, metavar="PATH",
+                    help="also write the summary CSV to this file")
     args, _ = ap.parse_known_args()
     fast = not args.full
 
     from benchmarks import (composite, finetune, kernel_bench, overheads,
-                            quality, quant_compare)
+                            quality, quant_compare, serve_bench)
 
     sections = []
     rows = []
@@ -42,6 +49,7 @@ def main() -> None:
         ("fig11_fig12_overheads_e5", lambda: overheads.main(fast)),
         ("table13_quant_compare", lambda: quant_compare.main(fast)),
         ("kernel_bench", lambda: kernel_bench.main(fast)),
+        ("serve_bench", lambda: serve_bench.main(fast)),
     ]:
         nm, us, result, text = _timed(name, fn)
         derived = _derive(name, result)
@@ -63,9 +71,12 @@ def main() -> None:
         except Exception as e:                        # noqa: BLE001
             rows.append(("roofline_from_dryrun", 0.0, f"error:{e!r}"))
 
-    print("name,us_per_call,derived")
-    for nm, us, derived in rows:
-        print(f"{nm},{us:.0f},{derived}")
+    csv_lines = ["name,us_per_call,derived"]
+    csv_lines += [f"{nm},{us:.0f},{derived}" for nm, us, derived in rows]
+    print("\n".join(csv_lines))
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("\n".join(csv_lines) + "\n")
     for nm, text in sections:
         print(f"\n===== {nm} =====")
         print(text.rstrip())
@@ -115,6 +126,10 @@ def _derive(name: str, result) -> str:
             return (f"block_skip={bs['skip_frac']:.2f}"
                     f";flash_MiB_avoided="
                     f"{at['score_matrix_mib_avoided']:.0f}")
+        if name == "serve_bench":
+            return (f"continuous_vs_static={result['speedup']:.2f}x"
+                    f";sparse_agrees={result['sparse_agrees']}"
+                    f";flops_skipped={result['flops_skipped']:.2f}")
     except Exception as e:                            # noqa: BLE001
         return f"derive-error:{e!r}"
     return "-"

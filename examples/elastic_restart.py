@@ -5,11 +5,9 @@ continue — losses line up across the restart.
   PYTHONPATH=src python examples/elastic_restart.py
 (re-executes itself with 8 fake devices)
 """
-import json
 import os
 import subprocess
 import sys
-import tempfile
 
 BODY = r"""
 import os, json, tempfile

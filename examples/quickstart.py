@@ -2,7 +2,6 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_smoke_config

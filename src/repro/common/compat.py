@@ -1,0 +1,22 @@
+"""Version compatibility for the jax APIs the repo uses.
+
+The distributed code targets the modern spelling (``jax.shard_map``,
+``jax.lax.pvary``); on jax 0.4.x those live under ``jax.experimental``
+or don't exist. Import from here instead of feature-detecting inline.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.4.38
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    # Pre-VMA shard_map has no varying-axis tracking: every value is
+    # already device-varying, so marking is the identity.
+    def pvary(x, axis_names):  # noqa: ARG001
+        return x

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
 
 from repro.core import structured as S
 from repro.core import unstructured as U

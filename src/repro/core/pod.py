@@ -10,7 +10,6 @@ pruned less.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +60,6 @@ def global_rank(params, cfg: ModelConfig, anorms: dict,
         if proj.expert_axis is not None and not per_expert:
             raw[proj.key] = float(outlier_ratio(metric.reshape(-1), alpha))
         elif proj.expert_axis is not None:
-            E = metric.shape[0]
             ratios = jax.vmap(lambda m: outlier_ratio(m, alpha))(metric)
             raw[proj.key] = np.asarray(ratios)
         else:

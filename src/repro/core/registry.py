@@ -12,7 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
-from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
+from repro.models.specs import (AttentionSpec, LayerSpec, MLPSpec,
                                 ModelConfig, MoESpec)
 
 # Canonical projection names per mixer/ffn kind, in paper order

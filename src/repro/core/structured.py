@@ -10,13 +10,11 @@ is exactly the paper's composite synergy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.tree import tree_get, tree_set
 from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
                                 ModelConfig, MoESpec)
 

@@ -7,7 +7,6 @@ all-reduce is DCN-bound; ICI reductions stay fp32.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

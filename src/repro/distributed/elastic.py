@@ -9,7 +9,6 @@ because checkpoints store unsharded logical arrays.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
 import jax

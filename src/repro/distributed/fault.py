@@ -11,7 +11,6 @@ import threading
 import time
 from typing import Callable, Optional
 
-import numpy as np
 
 
 class PreemptionHandler:

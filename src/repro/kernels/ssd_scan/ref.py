@@ -1,7 +1,6 @@
 """Pure-jnp oracle: the model's chunked SSD (repro.models.ssm)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.ssm import ssd_chunked
 

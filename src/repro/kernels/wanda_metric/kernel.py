@@ -15,7 +15,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(w_ref, a_ref, o_ref, *, threshold: Optional[float]):

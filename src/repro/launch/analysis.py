@@ -10,9 +10,7 @@ per-period cost = c2 - c1; total = c1 + (P-1)(c2-c1)).
 from __future__ import annotations
 
 import re
-from typing import Optional
 
-import numpy as np
 
 DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -17,7 +17,6 @@ import argparse
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,14 @@
-"""Serving launcher: batched generation with a (optionally pruned) model.
+"""Serving launcher: static or continuous batching, optionally pruned.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
-      --prune 0.5 --category composite
+      --prune 0.5 --category composite --engine continuous --sparse
+
+``--engine static`` runs the fixed-batch ``Engine`` (every prompt padded
+to one length, one batch to completion). ``--engine continuous`` runs
+the slot-pool ``ContinuousEngine``: mixed-length requests are admitted
+FIFO into free KV slots and decoded together, one jitted step per tick.
+``--sparse`` packs the pruned projections into block plans and routes
+the serving MLPs through the Pallas block-sparse kernel.
 """
 from __future__ import annotations
 
@@ -10,25 +17,36 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config, list_archs
 from repro.core.prune_controller import run_pruning_controller
 from repro.core.rank_controller import run_ranking_controller
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
+from repro.serve.batching import ContinuousEngine, latency_percentiles
 from repro.serve.engine import Engine
+from repro.serve.scheduler import Request
+from repro.serve.sparse import flop_savings, pack_model
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(), default="llama3-8b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", choices=["static", "continuous"],
+                    default="static")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / number of requests")
+    ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--prune", type=float, default=0.0)
     ap.add_argument("--category", default="composite",
                     choices=["unstructured", "structured", "composite"])
+    ap.add_argument("--sparse", action="store_true",
+                    help="serve pruned MLPs through the block-sparse kernel")
+    ap.add_argument("--sparse-block", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -46,18 +64,48 @@ def main() -> None:
         params, cfg = res.params, res.cfg
         print(f"pruned {args.prune:.0%} via {res.category}")
 
-    eng = Engine(params, cfg, max_seq=args.prompt_len + args.new_tokens,
-                 compute_dtype=jnp.float32, cache_dtype=jnp.float32)
-    prompt = jnp.asarray(
-        corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
-    t0 = time.perf_counter()
-    out = eng.generate(prompt, args.new_tokens,
-                       temperature=args.temperature)
-    dt = time.perf_counter() - t0
-    toks = args.batch * args.new_tokens
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s incl. compile)")
-    print("sample:", out[0, -args.new_tokens:].tolist()[:16], "...")
+    packed = None
+    if args.sparse:
+        packed = pack_model(params, cfg, block=args.sparse_block)
+        print(f"packed {len(packed)} projections, "
+              f"{flop_savings(packed):.0%} projection FLOPs skipped")
+
+    max_seq = args.prompt_len + args.new_tokens
+    if args.engine == "static":
+        eng = Engine(params, cfg, max_seq=max_seq,
+                     compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+                     packed=packed)
+        prompt = jnp.asarray(
+            corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
+        t0 = time.perf_counter()
+        out = eng.generate(prompt, args.new_tokens,
+                           temperature=args.temperature)
+        dt = time.perf_counter() - t0
+        toks = args.batch * args.new_tokens
+        print(f"generated {out.shape} in {dt:.2f}s "
+              f"({toks / dt:.1f} tok/s incl. compile)")
+        print("sample:", out[0, -args.new_tokens:].tolist()[:16], "...")
+        return
+
+    # continuous: mixed-length requests through the slot pool
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.batch):
+        s0 = int(rng.integers(max(args.prompt_len // 2, 1),
+                              args.prompt_len + 1))
+        prompt = corpus.batch(i, 1, s0)[0, :s0].tolist()
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new_tokens=args.new_tokens))
+    eng = ContinuousEngine(params, cfg, max_slots=args.max_slots,
+                           max_seq=max_seq, compute_dtype=jnp.float32,
+                           cache_dtype=jnp.float32, packed=packed)
+    finished, stats = eng.run(reqs, temperature=args.temperature)
+    lat = latency_percentiles(finished)
+    print(f"served {len(finished)} requests, {stats.generated_tokens} tokens "
+          f"in {stats.wall_s:.2f}s ({stats.tokens_per_s:.1f} tok/s "
+          f"incl. compile), slot util {stats.slot_utilization:.0%}, "
+          f"p50 {lat['p50']:.0f}ms p99 {lat['p99']:.0f}ms")
+    print("sample:", finished[0].tokens[:16], "...")
 
 
 if __name__ == "__main__":

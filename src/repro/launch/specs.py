@@ -5,13 +5,11 @@ correct structs that jit().lower() accepts directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.configs.shapes import ShapeSpec
 from repro.models import transformer as T
 from repro.models.specs import ModelConfig
 from repro.train import optimizer as OPT

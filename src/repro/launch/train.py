@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager

@@ -176,9 +176,19 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
 
     new_cache = None
     if cache is not None:
-        # write current step(s) at cache_index, attend over full cache
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_index, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_index, axis=1)
+        # write current step(s) at cache_index, attend over full cache.
+        # cache_index is a scalar (whole batch at one offset: train-style
+        # prefill/decode) or a (B,) vector (slot pool: every sequence at
+        # its own length, continuous batching).
+        ci = jnp.asarray(cache_index, jnp.int32)
+        if ci.ndim == 0:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, ci, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, ci, axis=1)
+        else:
+            def upd(c, u, i):
+                return jax.lax.dynamic_update_slice_in_dim(c, u, i, axis=0)
+            ck = jax.vmap(upd)(cache["k"], k, ci)
+            cv = jax.vmap(upd)(cache["v"], v, ci)
         new_cache = {"k": ck, "v": cv}
         if expand:
             ck, cv = _expand(ck, cv)
@@ -200,7 +210,7 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
             S_max = ck.shape[1]
             kv_pos = jnp.arange(S_max, dtype=jnp.int32)[None, :]
             kv_pos = jnp.broadcast_to(kv_pos, (x.shape[0], S_max))
-            valid = kv_pos < (cache_index + x.shape[1])
+            valid = kv_pos < ((ci[:, None] if ci.ndim else ci) + x.shape[1])
             out = _dense_attention(q, ck, cv, positions, kv_pos,
                                    causal=spec.causal, kv_valid=valid)
     else:

@@ -5,7 +5,6 @@ small / structurally-pruned models unroll with per-layer parameter shapes.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Optional
 
 import jax
@@ -15,8 +14,8 @@ from repro.distributed.axes import hint
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models import ssm as SSM
-from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
-                                ModelConfig, MoESpec)
+from repro.models.specs import (AttentionSpec, LayerSpec, ModelConfig,
+                                MoESpec)
 
 
 # ---------------------------------------------------------------- init
@@ -85,11 +84,43 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int,
             for i in range(cfg.n_layers)]
 
 
+# ------------------------------------------------------------- slot pool
+
+def init_cache_pool(cfg: ModelConfig, max_slots: int, max_seq: int,
+                    dtype=jnp.bfloat16):
+    """A fixed ``(max_slots, max_seq)`` KV pool for continuous batching.
+
+    The pool is an ordinary cache whose batch axis is the slot axis;
+    sequences are prefillled into individual slots (``write_cache_slot``)
+    and decoded at per-slot offsets (vector ``cache_index`` in
+    ``forward``). Per-slot length/active bookkeeping lives host-side in
+    the scheduler. Unrolled configs only: the slot axis must be the
+    leading axis of every cache leaf.
+    """
+    if cfg.scan_layers:
+        raise ValueError("cache pools require an unrolled config "
+                         "(cfg.replace(scan_layers=False))")
+    return init_cache(cfg, max_slots, max_seq, dtype)
+
+
+def write_cache_slot(pool, row, slot):
+    """Scatter a batch-1 cache ``row`` into ``pool`` at slot ``slot``.
+
+    ``row`` is the cache produced by a B=1 prefill; every leaf's leading
+    axis is the batch/slot axis. jit-safe (``slot`` may be traced).
+    """
+    return jax.tree.map(
+        lambda p, r: jax.lax.dynamic_update_slice_in_dim(
+            p, r.astype(p.dtype), slot, axis=0),
+        pool, row)
+
+
 # ---------------------------------------------------------------- forward
 
 def apply_block(block_params: dict, cfg: ModelConfig, spec: LayerSpec,
                 x: jax.Array, positions: jax.Array,
-                cache: Optional[dict], cache_index):
+                cache: Optional[dict], cache_index,
+                layer: int = 0, mlp_apply=None):
     h = L.apply_norm(block_params["norm1"], cfg.norm, x)
     new_cache = {}
     if isinstance(spec.mixer, AttentionSpec):
@@ -110,6 +141,8 @@ def apply_block(block_params: dict, cfg: ModelConfig, spec: LayerSpec,
         h = L.apply_norm(block_params["norm2"], cfg.norm, x)
         if isinstance(spec.ffn, MoESpec):
             y, aux = MOE.apply_moe(block_params["moe"], spec.ffn, h)
+        elif mlp_apply is not None:
+            y = mlp_apply(block_params, spec.ffn, h, layer)
         else:
             y = L.apply_mlp(block_params["mlp"], spec.ffn, h)
         x = x + y
@@ -120,17 +153,26 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             frontend_embeds: Optional[jax.Array] = None,
             cache=None, cache_index=None,
-            compute_dtype=jnp.bfloat16):
+            compute_dtype=jnp.bfloat16, mlp_apply=None):
     """Returns (logits, new_cache, aux_loss).
 
     tokens: (B, S) int32. frontend_embeds: (B, F, d) stub embeddings that
     replace the first F token embeddings (VLM patches / audio frames).
-    cache + cache_index: decode mode (tokens are the new step(s)).
+    cache + cache_index: decode mode (tokens are the new step(s));
+    cache_index is a scalar or a per-sequence (B,) vector (slot pool).
+    mlp_apply: optional ``(block_params, mlp_spec, x, layer) -> y``
+    override for dense-MLP layers — the serving block-sparse fast path.
+    Unrolled configs only (the layer index must be static).
     """
     B, S = tokens.shape
+    if mlp_apply is not None and cfg.scan_layers:
+        raise ValueError("mlp_apply needs static layer indices; use an "
+                         "unrolled config (scan_layers=False)")
     if positions is None:
         if cache_index is not None:
-            positions = cache_index + jnp.arange(S, dtype=jnp.int32)[None, :]
+            ci = jnp.asarray(cache_index, jnp.int32)
+            ci = ci[:, None] if ci.ndim else ci
+            positions = ci + jnp.arange(S, dtype=jnp.int32)[None, :]
             positions = jnp.broadcast_to(positions, (B, S))
         else:
             positions = jnp.broadcast_to(
@@ -179,9 +221,10 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
             ci = cache[i] if cache is not None else None
             spec_i = cfg.layer(i)
 
-            def body(bp, xh, c, spec=spec_i):
+            def body(bp, xh, c, spec=spec_i, layer=i):
                 return apply_block(bp, cfg, spec, xh, positions, c,
-                                   cache_index)
+                                   cache_index, layer=layer,
+                                   mlp_apply=mlp_apply)
             if cfg.remat:
                 body = jax.checkpoint(
                     body, policy=jax.checkpoint_policies.nothing_saveable)

@@ -2,10 +2,14 @@
 
 ``make_serve_step`` is the artifact the decode/long dry-run shapes lower:
 one new token against a KV cache of S_max, cache updated in place.
+
+Both step factories accept an optional ``mlp_apply`` override so a
+Mosaic-pruned model's feed-forward runs through the Pallas block-sparse
+kernel (``repro.serve.sparse``) in the serving hot loop. The
+continuous-batching engine lives in ``repro.serve.batching``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -15,22 +19,36 @@ from repro.models import transformer as T
 from repro.models.specs import ModelConfig
 
 
-def make_prefill_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+def make_sparse_mlp_apply(packed: dict, interpret: bool = True):
+    """`mlp_apply` hook routing dense-MLP layers through the block-sparse
+    kernel wherever ``packed`` (from ``sparse.pack_model``) has a plan."""
+    from repro.serve.sparse import sparse_apply_mlp
+
+    def mlp_apply(block_params, spec, x, layer):
+        return sparse_apply_mlp(block_params, spec, x, packed, layer,
+                                interpret=interpret)
+    return mlp_apply
+
+
+def make_prefill_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                      mlp_apply=None):
     def prefill_step(params, tokens, cache, frontend_embeds=None):
         logits, cache, _ = T.forward(
             params, cfg, tokens, frontend_embeds=frontend_embeds,
             cache=cache, cache_index=jnp.zeros((), jnp.int32),
-            compute_dtype=compute_dtype)
+            compute_dtype=compute_dtype, mlp_apply=mlp_apply)
         return logits, cache
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+def make_serve_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
+                    mlp_apply=None):
     def serve_step(params, cache, tokens, cache_index):
-        """tokens: (B, 1) — decode one token for every sequence."""
+        """tokens: (B, 1) — decode one token for every sequence.
+        cache_index: scalar, or (B,) per-slot lengths (continuous)."""
         logits, cache, _ = T.forward(
             params, cfg, tokens, cache=cache, cache_index=cache_index,
-            compute_dtype=compute_dtype)
+            compute_dtype=compute_dtype, mlp_apply=mlp_apply)
         return logits[:, -1, :], cache
     return serve_step
 
@@ -47,16 +65,25 @@ def sample_token(logits: jax.Array, key, temperature: float = 0.0,
 
 
 class Engine:
-    """Minimal batched generation engine over the functional steps."""
+    """Minimal static-batch generation engine over the functional steps.
+
+    ``packed`` (from ``sparse.pack_model``) routes the MLP projections
+    through the block-sparse kernel — the Mosaic fast path.
+    """
 
     def __init__(self, params, cfg: ModelConfig, max_seq: int,
-                 compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+                 compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
+                 packed: Optional[dict] = None, interpret: bool = True):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
-        self.prefill_step = jax.jit(make_prefill_step(cfg, compute_dtype))
-        self.serve_step = jax.jit(make_serve_step(cfg, compute_dtype))
+        mlp_apply = (make_sparse_mlp_apply(packed, interpret)
+                     if packed else None)
+        self.prefill_step = jax.jit(
+            make_prefill_step(cfg, compute_dtype, mlp_apply))
+        self.serve_step = jax.jit(
+            make_serve_step(cfg, compute_dtype, mlp_apply))
 
     def generate(self, prompt_tokens, n_new: int, temperature: float = 0.0,
                  seed: int = 0):

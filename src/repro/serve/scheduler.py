@@ -1,0 +1,132 @@
+"""Request scheduler for the continuous-batching engine.
+
+FIFO admission into a fixed pool of KV-cache slots: a request waits in
+the arrival queue until a slot frees, is prefilled into that slot, then
+decodes one token per engine tick alongside every other active slot.
+Finished sequences (EOS / per-request token budget / cache full) release
+their slot immediately, so requests of different lengths flow through
+the batch without ever recompiling the decode step.
+
+Pure host-side bookkeeping — no jax in this module. The engine
+(``repro.serve.batching``) owns the device arrays and calls
+``admissions`` / ``started`` / ``decoded`` around its jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``arrival`` is seconds on the engine's
+    workload clock (0 = available immediately)."""
+    uid: int
+    prompt: list
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Slot:
+    """An active sequence bound to a KV-pool slot."""
+    index: int
+    request: Request
+    length: int = 0             # tokens currently in the slot's cache
+    last_token: int = 0         # next decode input (last sampled token)
+    generated: list = dataclasses.field(default_factory=list)
+    admitted_at: float = 0.0
+    first_token_at: float = 0.0
+
+
+@dataclasses.dataclass
+class Finished:
+    request: Request
+    tokens: list                # generated tokens (includes EOS if hit)
+    reason: str                 # "eos" | "length" | "cache_full"
+    admitted_at: float
+    first_token_at: float
+    finished_at: float
+
+
+class Scheduler:
+    def __init__(self, max_slots: int, max_seq: int):
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.queue: deque[Request] = deque()
+        self.slots: dict[int, Slot] = {}            # index -> active slot
+        self.free: list[int] = list(range(max_slots - 1, -1, -1))
+        self.finished: list[Finished] = []
+        self.rejected: list[Request] = []
+
+    # ------------------------------------------------------------ intake
+
+    def submit(self, request: Request) -> None:
+        if len(request.prompt) + 1 > self.max_seq:
+            self.rejected.append(request)   # can't fit prompt + one token
+        else:
+            self.queue.append(request)
+
+    def admissions(self, now: float = 0.0) -> list[Slot]:
+        """Pop arrived FIFO requests into free slots; the engine prefills
+        each returned ``Slot`` and then calls ``started``."""
+        out = []
+        while self.free and self.queue and self.queue[0].arrival <= now:
+            req = self.queue.popleft()
+            slot = Slot(index=self.free.pop(), request=req, admitted_at=now)
+            self.slots[slot.index] = slot
+            out.append(slot)
+        return out
+
+    # ------------------------------------------------------- engine hooks
+
+    def started(self, slot: Slot, first_token: int, now: float = 0.0) -> None:
+        """Prefill done: prompt is in the cache, first token sampled."""
+        slot.length = len(slot.request.prompt)
+        slot.last_token = int(first_token)
+        slot.generated = [int(first_token)]
+        slot.first_token_at = now
+        self._maybe_finish(slot, now)
+
+    def decoded(self, tokens: dict, now: float = 0.0) -> None:
+        """One decode tick: ``tokens[slot_index]`` is the token sampled
+        for that slot. The decode step wrote the *previous* token's KV at
+        position ``length``, so every active slot grows by one."""
+        for idx, tok in tokens.items():
+            slot = self.slots.get(idx)
+            if slot is None:
+                continue
+            slot.length += 1
+            slot.last_token = int(tok)
+            slot.generated.append(int(tok))
+            self._maybe_finish(slot, now)
+
+    def _maybe_finish(self, slot: Slot, now: float) -> None:
+        req = slot.request
+        if req.eos_id is not None and slot.generated[-1] == req.eos_id:
+            reason = "eos"
+        elif len(slot.generated) >= req.max_new_tokens:
+            reason = "length"
+        elif slot.length >= self.max_seq:
+            reason = "cache_full"   # no room to write the next token's KV
+        else:
+            return
+        self.finished.append(Finished(
+            request=req, tokens=slot.generated, reason=reason,
+            admitted_at=slot.admitted_at, first_token_at=slot.first_token_at,
+            finished_at=now))
+        del self.slots[slot.index]
+        self.free.append(slot.index)
+
+    # ------------------------------------------------------------- state
+
+    def active(self) -> list[Slot]:
+        return sorted(self.slots.values(), key=lambda s: s.index)
+
+    def has_work(self) -> bool:
+        return bool(self.slots or self.queue)
+
+    def utilization(self) -> float:
+        return len(self.slots) / self.max_slots

@@ -7,8 +7,6 @@
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,9 +89,6 @@ def apply_updates(params, grads, opt_state: dict, cfg: OptConfig):
         lambda m, g: (cfg.b1 * m.astype(jnp.float32)
                       + (1 - cfg.b1) * g.astype(jnp.float32)).astype(m_dtype),
         opt_state["m"], grads)
-
-    is_v_leaf = lambda x: isinstance(x, dict) and (
-        "full" in x or "row" in x)
 
     def upd(p, g, m, v):
         g32 = g.astype(jnp.float32)

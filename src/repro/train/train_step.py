@@ -7,8 +7,6 @@ backward under XLA's latency-hiding scheduler).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import Prefetcher

@@ -1,0 +1,72 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+When ``hypothesis`` is installed (the ``[test]`` extra) the real
+``given`` / ``settings`` / ``strategies`` are re-exported unchanged.
+Without it, a tiny deterministic fallback runs each property test over a
+fixed number of seeded pseudo-random examples instead of failing at
+collection — tier-1 (`pytest -x -q`) must pass on a bare
+``pip install -e .`` plus pytest.
+
+Only the strategy surface the suite uses is implemented: ``floats``,
+``integers``, ``lists``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in hypothesis-free CI
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_kw):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._fallback_max_examples = min(max_examples, 25)
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_fallback_max_examples",
+                            getattr(fn, "_fallback_max_examples",
+                                    _FALLBACK_EXAMPLES))
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = [s.draw(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__dict__.update(fn.__dict__)
+            # hide the generated params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[:-len(strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+        return deco
