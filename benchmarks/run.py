@@ -37,7 +37,8 @@ def main() -> None:
     fast = not args.full
 
     from benchmarks import (composite, finetune, kernel_bench, overheads,
-                            quality, quant_compare, serve_bench)
+                            prune_pipeline, quality, quant_compare,
+                            serve_bench)
 
     sections = []
     rows = []
@@ -50,6 +51,7 @@ def main() -> None:
         ("table13_quant_compare", lambda: quant_compare.main(fast)),
         ("kernel_bench", lambda: kernel_bench.main(fast)),
         ("serve_bench", lambda: serve_bench.main(fast)),
+        ("prune_pipeline", lambda: prune_pipeline.main(fast)),
     ]:
         nm, us, result, text = _timed(name, fn)
         derived = _derive(name, result)
@@ -130,6 +132,9 @@ def _derive(name: str, result) -> str:
             return (f"continuous_vs_static={result['speedup']:.2f}x"
                     f";sparse_agrees={result['sparse_agrees']}"
                     f";flops_skipped={result['flops_skipped']:.2f}")
+        if name == "prune_pipeline":
+            return ";".join(f"{r['arch']}={r['seconds']:.1f}s"
+                            for r in result)
     except Exception as e:                            # noqa: BLE001
         return f"derive-error:{e!r}"
     return "-"

@@ -1,26 +1,31 @@
 """Serve-path comparison across the three Mosaic pruning categories:
 model size, CPU forward latency, perplexity — the E3 tradeoff, live —
-then the pruned model served end-to-end through the continuous-batching
-engine with the block-sparse fast path.
+then the full declarative loop: one PruneRecipe runs the pipeline, the
+PrunedArtifact round-trips through disk, and the continuous-batching
+engine serves it with the *saved* block plans (no pack_model at serve
+startup).
 
   PYTHONPATH=src python examples/prune_and_serve.py
 """
 import math
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.prune_controller import run_pruning_controller
-from repro.core.rank_controller import run_ranking_controller
 from repro.common.tree import param_bytes, param_count
-from repro.data.pipeline import SyntheticCorpus
 from repro.configs.registry import get_smoke_config
+from repro.core.artifact import PrunedArtifact
+from repro.core.pipeline import MosaicPipeline
+from repro.core.rank_controller import profile_model
+from repro.core.recipe import CalibrationSpec, PruneRecipe
+from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
 from repro.serve.batching import ContinuousEngine, latency_percentiles
 from repro.serve.scheduler import Request
-from repro.serve.sparse import flop_savings, pack_model
+from repro.serve.sparse import flop_savings
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer
 
@@ -35,8 +40,8 @@ def main():
                       prefetch=False)
     trainer.run(200)
     params = trainer.state["params"]
-    art = run_ranking_controller(params, cfg,
-                                 corpus.calibration_batches(16, 8, 64))
+    # one RC profile serves every category below (the paper's E5 win)
+    art = profile_model(params, cfg, corpus.calibration_batches(16, 8, 64))
     tokens, labels = next(corpus.batches(8, 64, start=900))
 
     def profile(p_, c_, name):
@@ -54,28 +59,34 @@ def main():
               f"ppl={ppl:8.1f}")
 
     profile(params, cfg, "dense")
-    results = {}
+    base = PruneRecipe(arch=cfg.name, p=0.6, selector="wanda_block",
+                       align_channels=16, block=16,
+                       calibration=CalibrationSpec(16, 8, 64))
+    artifacts = {}
     for cat in ("unstructured", "composite", "structured"):
-        res = run_pruning_controller(params, cfg, art, 0.6, category=cat,
-                                     align_channels=8)
-        profile(res.params, res.cfg, cat)
-        results[cat] = res
+        recipe = base.replace(category=cat)
+        bundle = MosaicPipeline(recipe).run(params, cfg, rank_artifact=art)
+        profile(bundle.params, bundle.cfg, cat)
+        artifacts[cat] = bundle
 
-    # serve the composite-pruned model through the continuous engine,
-    # MLPs routed through the block-sparse kernel (interpret on CPU)
-    res = results["composite"]
-    packed = pack_model(res.params, res.cfg, block=16)
-    print(f"\nserving composite-pruned model: {len(packed)} packed "
-          f"projections, {flop_savings(packed):.0%} FLOPs skipped")
-    rng = np.random.default_rng(0)
-    reqs = [Request(uid=i,
-                    prompt=corpus.batch(i, 1, s0)[0, :s0].tolist(),
-                    max_new_tokens=16)
-            for i, s0 in enumerate(rng.integers(8, 33, size=8).tolist())]
-    eng = ContinuousEngine(res.params, res.cfg, max_slots=4, max_seq=64,
-                           compute_dtype=jnp.float32,
-                           cache_dtype=jnp.float32, packed=packed)
-    finished, stats = eng.run(reqs)
+    # the composite artifact round-trips through disk, then serves with
+    # its saved plans — exactly what launch/serve.py --artifact does
+    with tempfile.TemporaryDirectory() as d:
+        artifacts["composite"].save(d)
+        loaded = PrunedArtifact.load(d)
+        pk = loaded.report["pack"]
+        print(f"\nserving saved composite artifact: {pk['n_packed']} plans "
+              f"({pk['n_skipped']} projections skipped at pack), "
+              f"{flop_savings(loaded.packed):.0%} FLOPs skipped")
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i,
+                        prompt=corpus.batch(i, 1, s0)[0, :s0].tolist(),
+                        max_new_tokens=16)
+                for i, s0 in enumerate(rng.integers(8, 33, size=8).tolist())]
+        eng = ContinuousEngine.from_artifact(loaded, max_slots=4, max_seq=64,
+                                             compute_dtype=jnp.float32,
+                                             cache_dtype=jnp.float32)
+        finished, stats = eng.run(reqs)
     lat = latency_percentiles(finished)
     print(f"continuous+sparse: {stats.generated_tokens} tokens in "
           f"{stats.wall_s:.2f}s ({stats.tokens_per_s:.1f} tok/s incl. "

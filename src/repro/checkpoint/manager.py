@@ -119,3 +119,33 @@ class CheckpointManager:
         with open(os.path.join(self.directory, f"step_{step:08d}",
                                "meta.json")) as f:
             return json.load(f)
+
+    # ------------------------------------------------- sidecar documents
+    # Artifact bundles (PrunedArtifact) keep JSON documents and auxiliary
+    # array files next to the weight checkpoint; writes are atomic
+    # (tmp + rename) like the checkpoint itself.
+
+    def save_json(self, name: str, obj: Any) -> None:
+        path = os.path.join(self.directory, name)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=2)
+        os.replace(tmp, path)
+
+    def load_json(self, name: str) -> Any:
+        with open(os.path.join(self.directory, name)) as f:
+            return json.load(f)
+
+    def save_arrays(self, name: str, arrays: dict) -> None:
+        path = os.path.join(self.directory, name)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+
+    def load_arrays(self, name: str) -> dict:
+        with np.load(os.path.join(self.directory, name)) as data:
+            return {k: data[k] for k in data.files}
+
+    def has(self, name: str) -> bool:
+        return os.path.exists(os.path.join(self.directory, name))

@@ -12,6 +12,7 @@ from typing import Optional
 
 from repro.core import structured as S
 from repro.core import unstructured as U
+from repro.core.registry import register_category
 from repro.models.specs import ModelConfig
 
 
@@ -21,7 +22,8 @@ def prune_composite(params, cfg: ModelConfig, targets: dict,
                     hessians: Optional[dict] = None,
                     structured_share: float = 0.5,
                     align_heads: int = 1, align_channels: int = 1,
-                    per_output: bool = True):
+                    per_output: bool = True,
+                    block: int = 16):
     """Returns (new_params, new_cfg, info).
 
     targets: per-projection POD targets (mean == p). structured_share: the
@@ -31,7 +33,7 @@ def prune_composite(params, cfg: ModelConfig, targets: dict,
     """
     params, masks = U.prune_unstructured(
         params, cfg, targets, selector=selector, anorms=anorms,
-        hessians=hessians, per_output=per_output)
+        hessians=hessians, per_output=per_output, block=block)
     fractions = S.structured_fractions(targets, cfg, share=structured_share)
     new_params, new_cfg = S.prune_structured(
         params, cfg, fractions, align_heads=align_heads,
@@ -41,3 +43,16 @@ def prune_composite(params, cfg: ModelConfig, targets: dict,
         "structured_fractions": fractions,
     }
     return new_params, new_cfg, info
+
+
+@register_category("composite")
+def _category_composite(params, cfg, targets, artifact, recipe):
+    """The paper's headline mode: mask at full target, then physically
+    remove the hollowed-out groups at ``structured_share``."""
+    return prune_composite(
+        params, cfg, targets, selector=recipe.selector,
+        anorms=artifact.anorms, hessians=artifact.hessians,
+        structured_share=recipe.structured_share,
+        align_heads=recipe.align_heads,
+        align_channels=recipe.align_channels,
+        per_output=recipe.per_output, block=recipe.block)

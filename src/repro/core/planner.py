@@ -100,3 +100,10 @@ def plan(rank: dict, p: float, granularity: str = "projection",
             out.update(plan_targets(sub, lt[layer], within_spread, w))
         return out
     raise ValueError(f"unknown granularity {granularity!r}")
+
+
+def plan_from_recipe(rank: dict, recipe, weights: Optional[dict] = None) -> dict:
+    """The pipeline's ``plan`` stage: targets from a declarative recipe."""
+    return plan(rank, recipe.p, granularity=recipe.granularity,
+                spread=recipe.spread, within_spread=recipe.within_spread,
+                weights=weights)

@@ -1,24 +1,28 @@
 """Mosaic Parameter Pruning Controller (Fig. 6).
 
-Takes the RC's global rank + a user pruning target p, plans per-projection
-sparsity targets, picks the pruning category for the target platform, and
-produces a deployment-ready pruned model.
+Category selection (PC step 9) and the deployment-platform presets live
+here; category *execution* is pluggable — each category registers an
+executor in ``repro.core.registry.CATEGORIES`` from its home module, and
+the pipeline's ``prune`` stage dispatches by name.
+
+``run_pruning_controller`` is a deprecation shim kept for existing
+callers: it builds a :class:`~repro.core.recipe.PruneRecipe` and runs
+the ``plan`` + ``prune`` stages of :class:`~repro.core.pipeline.
+MosaicPipeline` against a precomputed :class:`~repro.core.
+rank_controller.RankArtifact`.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 from repro.common.tree import param_bytes
-from repro.core import composite as COMP
-from repro.core import planner as PL
-from repro.core import structured as S
-from repro.core import unstructured as U
+from repro.core import composite as COMP          # noqa: F401 (registers)
+from repro.core import structured as S            # noqa: F401 (registers)
+from repro.core import unstructured as U          # noqa: F401 (registers)
 from repro.core.rank_controller import RankArtifact
+from repro.core.recipe import PruneRecipe
 from repro.models.specs import ModelConfig
-
-CATEGORIES = ("unstructured", "structured", "composite")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,19 +34,46 @@ class Platform:
     tp_size: int = 1                 # tensor-parallel alignment requirement
 
 
-def select_category(platform: Platform, dense_bytes: int, p: float) -> str:
+PLATFORMS = {
+    "cloud": Platform("cloud", 80 << 30, has_sparse_accel=True, tp_size=16),
+    "edge": Platform("edge", 4 << 30),
+    "mobile": Platform("mobile", 8 << 30),
+}
+
+
+def select_category(platform: Platform, dense_bytes: int, p: float,
+                    structured_share: float = 0.5) -> str:
     """PC step 9: category by available memory (Section IV).
 
     Plenty of memory + sparsity acceleration -> unstructured (quality).
     Cannot fit even the composite model -> structured (max shrink).
-    Otherwise -> composite.
+    Otherwise -> composite. The composite size estimate uses the
+    recipe's actual ``structured_share`` (the physically removed
+    fraction of the target), not a hardcoded half.
     """
     if platform.has_sparse_accel and dense_bytes <= platform.memory_bytes:
         return "unstructured"
-    composite_bytes = dense_bytes * (1.0 - 0.5 * p)
+    composite_bytes = dense_bytes * (1.0 - structured_share * p)
     if composite_bytes <= platform.memory_bytes:
         return "composite"
     return "structured"
+
+
+def resolve_category(recipe: PruneRecipe, dense_bytes: int,
+                     platform: Optional[Platform] = None) -> str:
+    """Recipe category, or platform-driven selection when deferred."""
+    if recipe.category is not None:
+        return recipe.category
+    plat = platform
+    if plat is None and recipe.platform is not None:
+        if recipe.platform not in PLATFORMS:
+            raise KeyError(f"unknown platform {recipe.platform!r}; "
+                           f"presets: {sorted(PLATFORMS)}")
+        plat = PLATFORMS[recipe.platform]
+    if plat is None:
+        return "composite"
+    return select_category(plat, dense_bytes, recipe.p,
+                           recipe.structured_share)
 
 
 @dataclasses.dataclass
@@ -68,39 +99,23 @@ def run_pruning_controller(params, cfg: ModelConfig, artifact: RankArtifact,
                            align_heads: int = 1,
                            align_channels: int = 1,
                            per_output: bool = True) -> PruneResult:
+    """Deprecated shim — build a :class:`PruneRecipe` and run
+    :class:`~repro.core.pipeline.MosaicPipeline` instead."""
+    from repro.core.pipeline import MosaicPipeline
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
-    t0 = time.perf_counter()
-    if category is None:
-        if platform is None:
-            category = "composite"
-        else:
-            category = select_category(platform, param_bytes(params), p)
-    assert category in CATEGORIES, category
-
-    targets = PL.plan(artifact.rank, p, granularity=granularity,
-                      spread=spread, within_spread=within_spread,
-                      weights=artifact.weights)
-    info: dict = {}
-    if category == "unstructured":
-        params, masks = U.prune_unstructured(
-            params, cfg, targets, selector=selector,
-            anorms=artifact.anorms, hessians=artifact.hessians,
-            per_output=per_output)
-        info["unstructured_sparsity"] = U.achieved_sparsity(masks)
-        new_cfg = cfg
-    elif category == "structured":
-        fractions = S.structured_fractions(targets, cfg, share=1.0)
-        params, new_cfg = S.prune_structured(
-            params, cfg, fractions, align_heads=align_heads,
-            align_channels=align_channels)
-        info["structured_fractions"] = fractions
-    else:
-        params, new_cfg, info = COMP.prune_composite(
-            params, cfg, targets, selector=selector,
-            anorms=artifact.anorms, hessians=artifact.hessians,
-            structured_share=structured_share,
-            align_heads=align_heads, align_channels=align_channels,
-            per_output=per_output)
-    return PruneResult(params=params, cfg=new_cfg, category=category,
-                       granularity=granularity, targets=targets, info=info,
-                       prune_seconds=time.perf_counter() - t0)
+    if category is None and platform is not None:
+        category = select_category(platform, param_bytes(params), p,
+                                   structured_share)
+    recipe = PruneRecipe(
+        arch=cfg.name, p=p, category=category, granularity=granularity,
+        selector=selector, spread=spread, within_spread=within_spread,
+        structured_share=structured_share, align_heads=align_heads,
+        align_channels=align_channels, per_output=per_output,
+        block=16,                 # the historical wanda_block mask tile
+        stages=("plan", "prune", "report"))
+    art = MosaicPipeline(recipe).run(params, cfg, rank_artifact=artifact)
+    return PruneResult(params=art.params, cfg=art.cfg,
+                       category=art.report["category"],
+                       granularity=granularity, targets=art.targets,
+                       info=art.info,
+                       prune_seconds=art.report["prune_seconds"])

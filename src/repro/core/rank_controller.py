@@ -30,10 +30,12 @@ class RankArtifact:
     hessians: Optional[dict] = None     # only when sparsegpt requested
 
 
-def run_ranking_controller(params, cfg: ModelConfig,
-                           calibration_batches: Iterable,
-                           alpha: float = pod.DEFAULT_ALPHA,
-                           want_hessians: bool = False) -> RankArtifact:
+def profile_model(params, cfg: ModelConfig,
+                  calibration_batches: Iterable,
+                  alpha: float = pod.DEFAULT_ALPHA,
+                  want_hessians: bool = False) -> RankArtifact:
+    """RC profiling (the pipeline's ``rank`` stage): one calibration pass
+    over the model emits the reusable global rank R_LLM."""
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
     t0 = time.perf_counter()
     batches = list(calibration_batches)
@@ -49,3 +51,13 @@ def run_ranking_controller(params, cfg: ModelConfig,
                         n_tokens=n_tokens,
                         profile_seconds=time.perf_counter() - t0,
                         hessians=hessians)
+
+
+def run_ranking_controller(params, cfg: ModelConfig,
+                           calibration_batches: Iterable,
+                           alpha: float = pod.DEFAULT_ALPHA,
+                           want_hessians: bool = False) -> RankArtifact:
+    """Deprecated shim — use :func:`profile_model`, or run the ``rank``
+    stage of :class:`repro.core.pipeline.MosaicPipeline`."""
+    return profile_model(params, cfg, calibration_batches, alpha=alpha,
+                         want_hessians=want_hessians)

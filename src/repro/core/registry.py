@@ -6,14 +6,62 @@ tap name, and input-channel axes so POD / pruning are model-agnostic.
 
 Operates on unrolled configs (``cfg.unrolled()``): ranking and pruning are
 per-layer by definition (Eq. 2), so scanned stacks are unrolled first.
+
+Also hosts the plug-in registries the declarative pipeline dispatches
+through: mask *selectors* (magnitude / wanda / wanda_block / sparsegpt),
+pruning *categories* (unstructured / structured / composite), and
+pipeline *stages* (rank / plan / prune / pack / report). Implementations
+self-register from their home modules, so adding a selector or category
+is one decorated function — no if/elif chain to extend.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.models.specs import (AttentionSpec, LayerSpec, MLPSpec,
                                 ModelConfig, MoESpec)
+
+
+class Registry:
+    """Named plug-in table with decorator registration."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, Callable] = {}
+
+    def register(self, name: str) -> Callable:
+        def deco(fn: Callable) -> Callable:
+            if name in self._entries:
+                raise ValueError(f"duplicate {self.kind} {name!r}")
+            self._entries[name] = fn
+            return fn
+        return deco
+
+    def get(self, name: str) -> Callable:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(f"unknown {self.kind} {name!r}; "
+                           f"registered: {sorted(self._entries)}") from None
+
+    def names(self) -> list:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+
+# selector(w, proj, target, ctx) -> (new_w, mask); ctx: SelectorContext
+SELECTORS = Registry("selector")
+# category(params, cfg, targets, artifact, recipe) -> (params, cfg, info)
+CATEGORIES = Registry("category")
+# stage(ctx: PipelineContext) -> None (mutates ctx)
+STAGES = Registry("stage")
+
+register_selector = SELECTORS.register
+register_category = CATEGORIES.register
+register_stage = STAGES.register
 
 # Canonical projection names per mixer/ffn kind, in paper order
 # {Q, K, V, O, G, U, D}.

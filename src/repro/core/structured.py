@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.registry import register_category
 from repro.models.specs import (AttentionSpec, LayerSpec, MambaSpec, MLPSpec,
                                 ModelConfig, MoESpec)
 
@@ -224,3 +225,13 @@ def prune_structured(params, cfg: ModelConfig, fractions: dict,
     new_cfg = cfg.replace(pattern=tuple(new_specs), n_periods=1,
                           scan_layers=False)
     return new_params, new_cfg
+
+
+@register_category("structured")
+def _category_structured(params, cfg, targets, artifact, recipe):
+    """Physical-only pruning: maximum shrink for memory-bound targets."""
+    fractions = structured_fractions(targets, cfg, share=1.0)
+    params, new_cfg = prune_structured(
+        params, cfg, fractions, align_heads=recipe.align_heads,
+        align_channels=recipe.align_channels)
+    return params, new_cfg, {"structured_fractions": fractions}

@@ -10,6 +10,7 @@ achieved sparsity is exact and idempotent.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -17,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.common.tree import tree_get, tree_set
 from repro.core.pod import weight_metric
-from repro.core.registry import Projection, projections
+from repro.core.registry import (Projection, projections, register_category,
+                                 register_selector, SELECTORS)
 from repro.models.specs import ModelConfig
 
 
@@ -90,38 +92,84 @@ def score_projection(w: jax.Array, proj: Projection, selector: str,
     raise ValueError(f"unknown selector {selector!r}")
 
 
+@dataclasses.dataclass
+class SelectorContext:
+    """Side inputs a selector may need (from the RC artifact / recipe)."""
+    anorms: Optional[dict] = None
+    hessians: Optional[dict] = None
+    per_output: bool = False
+    block: int = 16              # mask tile for block selectors
+
+
+def _mask_and_zero(w, scores, target, proj, ctx: SelectorContext):
+    if ctx.per_output:
+        mask = per_output_mask(scores, target, proj.in_axes)
+    else:
+        mask = mask_from_scores(scores, target)
+    return jnp.where(mask, w, jnp.zeros_like(w)), mask
+
+
+@register_selector("magnitude")
+def _sel_magnitude(w, proj, target, ctx):
+    return _mask_and_zero(w, jnp.abs(w.astype(jnp.float32)), target, proj, ctx)
+
+
+@register_selector("wanda")
+def _sel_wanda(w, proj, target, ctx):
+    return _mask_and_zero(w, score_projection(w, proj, "wanda", ctx.anorms),
+                          target, proj, ctx)
+
+
+@register_selector("wanda_block")
+def _sel_wanda_block(w, proj, target, ctx):
+    scores = score_projection(w, proj, "wanda", ctx.anorms)
+    # mask tile == pack tile, so every pruned tile is a skipped tile
+    mask = block_mask_from_metric(scores, target, block=ctx.block)
+    return jnp.where(mask, w, jnp.zeros_like(w)), mask
+
+
+@register_selector("sparsegpt")
+def _sel_sparsegpt(w, proj, target, ctx):
+    from repro.core.sparsegpt import sparsegpt_prune
+    if ctx.hessians is None:
+        raise ValueError("sparsegpt selector needs calibration hessians")
+    return sparsegpt_prune(w, ctx.hessians[(proj.layer, proj.tap)],
+                           target, proj)
+
+
 def prune_unstructured(params, cfg: ModelConfig, targets: dict,
                        selector: str = "wanda",
                        anorms: Optional[dict] = None,
                        hessians: Optional[dict] = None,
-                       per_output: bool = False):
+                       per_output: bool = False,
+                       block: int = 16):
     """Apply per-projection masks. Returns (new_params, masks).
 
-    targets: {(layer, name): fraction}. selector='sparsegpt' additionally
-    updates surviving weights (OBS reconstruction).
+    targets: {(layer, name): fraction}. ``selector`` names an entry in
+    ``registry.SELECTORS``; 'sparsegpt' additionally updates surviving
+    weights (OBS reconstruction). ``block`` is the tile size for block
+    selectors — keep it equal to the serving kernel's pack block.
     """
+    sel = SELECTORS.get(selector)
+    ctx = SelectorContext(anorms=anorms, hessians=hessians,
+                          per_output=per_output, block=block)
     masks: dict = {}
     for proj in projections(cfg):
-        t = targets.get(proj.key, 0.0)
         w = tree_get(params, proj.path)
-        if selector == "sparsegpt":
-            from repro.core.sparsegpt import sparsegpt_prune
-            H = hessians[(proj.layer, proj.tap)]
-            new_w, mask = sparsegpt_prune(w, H, t, proj)
-        elif selector == "wanda_block":
-            scores = score_projection(w, proj, "wanda", anorms)
-            mask = block_mask_from_metric(scores, t)
-            new_w = jnp.where(mask, w, jnp.zeros_like(w))
-        else:
-            scores = score_projection(w, proj, selector, anorms)
-            if per_output:
-                mask = per_output_mask(scores, t, proj.in_axes)
-            else:
-                mask = mask_from_scores(scores, t)
-            new_w = jnp.where(mask, w, jnp.zeros_like(w))
+        new_w, mask = sel(w, proj, targets.get(proj.key, 0.0), ctx)
         params = tree_set(params, proj.path, new_w.astype(w.dtype))
         masks[proj.key] = mask
     return params, masks
+
+
+@register_category("unstructured")
+def _category_unstructured(params, cfg, targets, artifact, recipe):
+    """Mask-only pruning: quality-first, shapes unchanged."""
+    params, masks = prune_unstructured(
+        params, cfg, targets, selector=recipe.selector,
+        anorms=artifact.anorms, hessians=artifact.hessians,
+        per_output=recipe.per_output, block=recipe.block)
+    return params, cfg, {"unstructured_sparsity": achieved_sparsity(masks)}
 
 
 def achieved_sparsity(masks: dict) -> float:

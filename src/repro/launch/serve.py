@@ -1,18 +1,28 @@
-"""Serving launcher: static or continuous batching, optionally pruned.
+"""Serving launcher: static or continuous batching, dense / pruned /
+artifact-driven.
 
+  # serve a saved PrunedArtifact: params, config, and block plans load
+  # straight from disk — no ranking, pruning, or pack_model at startup
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --artifact results/pruned_gemma --engine continuous --sparse
+
+  # or run a recipe end-to-end (prune now, then serve the result)
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --recipe recipes/golden-smoke.json --engine continuous --sparse
+
+  # legacy flags still work (assembled into a recipe internally)
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --prune 0.5 --category composite --engine continuous --sparse
 
-``--engine static`` runs the fixed-batch ``Engine`` (every prompt padded
-to one length, one batch to completion). ``--engine continuous`` runs
-the slot-pool ``ContinuousEngine``: mixed-length requests are admitted
-FIFO into free KV slots and decoded together, one jitted step per tick.
-``--sparse`` packs the pruned projections into block plans and routes
-the serving MLPs through the Pallas block-sparse kernel.
+``--engine static`` runs the fixed-batch ``Engine``; ``--engine
+continuous`` runs the slot-pool ``ContinuousEngine``. ``--sparse``
+routes the serving MLPs through the Pallas block-sparse kernel using
+the artifact's saved ``PackedProjection`` plans.
 """
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
@@ -20,20 +30,84 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config, list_archs
-from repro.core.prune_controller import run_pruning_controller
-from repro.core.rank_controller import run_ranking_controller
+from repro.core.artifact import PrunedArtifact
+from repro.core.pipeline import MosaicPipeline
+from repro.core.recipe import CalibrationSpec, PruneRecipe
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
 from repro.serve.batching import ContinuousEngine, latency_percentiles
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
-from repro.serve.sparse import flop_savings, pack_model
+
+
+def _load_or_prune(args) -> tuple:
+    """Returns (params, cfg, packed, label)."""
+    if args.artifact:
+        art = PrunedArtifact.load(args.artifact)
+        print(f"loaded artifact {args.artifact}: arch={art.recipe.arch} "
+              f"category={art.report.get('category')} "
+              f"{len(art.packed)} saved plans")
+        return art.params, art.cfg, (art.packed if args.sparse else None), \
+            "artifact"
+
+    if args.recipe or args.prune > 0:
+        if args.recipe:
+            recipe = PruneRecipe.load(args.recipe)
+        else:
+            recipe = PruneRecipe(
+                arch=args.arch, p=args.prune, category=args.category,
+                align_channels=8, block=args.sparse_block,
+                calibration=CalibrationSpec(n_samples=8, batch_size=4,
+                                            seq_len=args.prompt_len))
+        if not (args.sparse or args.save_artifact):
+            # plans would be discarded — skip the pack stage entirely
+            recipe = recipe.replace(stages=tuple(
+                s for s in recipe.stages if s != "pack"))
+        elif args.sparse and "pack" not in recipe.stages:
+            # --sparse needs plans even if the recipe's stages omit pack;
+            # insert before 'report' so pack coverage lands in the report
+            stages = list(recipe.stages)
+            at = stages.index("report") if "report" in stages else len(stages)
+            recipe = recipe.replace(stages=tuple(
+                stages[:at] + ["pack"] + stages[at:]))
+        cfg = (get_smoke_config(recipe.arch) if args.smoke
+               else get_config(recipe.arch))
+        cfg = cfg.replace(scan_layers=False)
+        params = T.init_model(jax.random.PRNGKey(0), cfg)
+        art = MosaicPipeline(recipe).run(params, cfg)
+        if args.save_artifact:
+            art.save(args.save_artifact)
+            print(f"saved PrunedArtifact to {args.save_artifact}")
+        print(f"pruned p={recipe.p:.0%} via "
+              f"{art.report.get('category') or recipe.category or 'auto'} "
+              f"in {art.report.get('pipeline_seconds', 0.0):.1f}s")
+        return art.params, art.cfg, (art.packed if args.sparse else None), \
+            "recipe"
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(scan_layers=False)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    packed = None
+    if args.sparse:
+        # unpruned weights have no zero tiles, but the kernel path is
+        # still exercised (plans at ~100% density)
+        from repro.serve.sparse import pack_model
+        packed = pack_model(params, cfg, block=args.sparse_block) or None
+    return params, cfg, packed, "dense"
 
 
 def main() -> None:
+    # surface INFO logs (e.g. pack_model's skipped-projection summary)
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(), default="llama3-8b")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="serve a saved PrunedArtifact bundle")
+    ap.add_argument("--recipe", default=None, metavar="JSON",
+                    help="run a PruneRecipe end-to-end, then serve it")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="with --recipe/--prune: save the bundle here")
     ap.add_argument("--engine", choices=["static", "continuous"],
                     default="static")
     ap.add_argument("--batch", type=int, default=4,
@@ -50,25 +124,13 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = cfg.replace(scan_layers=False)
-    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    params, cfg, packed, source = _load_or_prune(args)
     corpus = SyntheticCorpus(cfg.vocab, seed=0)
-
-    if args.prune > 0:
-        calib = corpus.calibration_batches(8, 4, args.prompt_len)
-        art = run_ranking_controller(params, cfg, calib)
-        res = run_pruning_controller(params, cfg, art, args.prune,
-                                     category=args.category,
-                                     align_channels=8)
-        params, cfg = res.params, res.cfg
-        print(f"pruned {args.prune:.0%} via {res.category}")
-
-    packed = None
-    if args.sparse:
-        packed = pack_model(params, cfg, block=args.sparse_block)
-        print(f"packed {len(packed)} projections, "
-              f"{flop_savings(packed):.0%} projection FLOPs skipped")
+    if packed:
+        from repro.serve.sparse import flop_savings
+        print(f"sparse fast path: {len(packed)} plans "
+              f"({source}), {flop_savings(packed):.0%} projection "
+              f"FLOPs skipped")
 
     max_seq = args.prompt_len + args.new_tokens
     if args.engine == "static":

@@ -131,6 +131,51 @@ class ModelConfig:
         return dataclasses.replace(self, **kw)
 
 
+# ------------------------------------------------------- (de)serialization
+
+_SPEC_KINDS = {
+    "AttentionSpec": AttentionSpec,
+    "MambaSpec": MambaSpec,
+    "MLPSpec": MLPSpec,
+    "MoESpec": MoESpec,
+}
+
+
+def _spec_to_dict(spec) -> Optional[dict]:
+    if spec is None:
+        return None
+    d = {f.name: getattr(spec, f.name) for f in dataclasses.fields(spec)}
+    d["kind"] = type(spec).__name__
+    return d
+
+
+def _spec_from_dict(d: Optional[dict]):
+    if d is None:
+        return None
+    d = dict(d)
+    kind = d.pop("kind")
+    if kind not in _SPEC_KINDS:
+        raise ValueError(f"unknown spec kind {kind!r}")
+    return _SPEC_KINDS[kind](**d)
+
+
+def config_to_dict(cfg: ModelConfig) -> dict:
+    """JSON-safe dict; exact inverse of :func:`config_from_dict`."""
+    d = {f.name: getattr(cfg, f.name)
+         for f in dataclasses.fields(ModelConfig) if f.name != "pattern"}
+    d["pattern"] = [{"mixer": _spec_to_dict(l.mixer),
+                     "ffn": _spec_to_dict(l.ffn)} for l in cfg.pattern]
+    return d
+
+
+def config_from_dict(d: dict) -> ModelConfig:
+    d = dict(d)
+    pattern = tuple(
+        LayerSpec(mixer=_spec_from_dict(l["mixer"]),
+                  ffn=_spec_from_dict(l["ffn"])) for l in d.pop("pattern"))
+    return ModelConfig(pattern=pattern, **d)
+
+
 def scaled_down(cfg: ModelConfig, *, d_model: int = 64, head_dim: int = 16,
                 d_ff: int = 128, vocab: int = 512, n_periods: int = 1,
                 n_experts: Optional[int] = None, d_state: int = 16,

@@ -80,6 +80,16 @@ class ContinuousEngine:
                                       static_argnames=("temperature",))
         self._write = jax.jit(T.write_cache_slot)
 
+    @classmethod
+    def from_artifact(cls, artifact, max_slots: int, max_seq: int, *,
+                      sparse: bool = True, **kw) -> "ContinuousEngine":
+        """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`:
+        the saved block plans are rehydrated into the jitted hot loop —
+        no ``pack_model`` at startup."""
+        packed = artifact.packed if sparse else None
+        return cls(artifact.params, artifact.cfg, max_slots=max_slots,
+                   max_seq=max_seq, packed=packed or None, **kw)
+
     # ------------------------------------------------------------ pieces
 
     def _bucket(self, n: int) -> int:

@@ -85,6 +85,16 @@ class Engine:
         self.serve_step = jax.jit(
             make_serve_step(cfg, compute_dtype, mlp_apply))
 
+    @classmethod
+    def from_artifact(cls, artifact, max_seq: int, *, sparse: bool = True,
+                      **kw) -> "Engine":
+        """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`
+        directly: params, pruned config, and (with ``sparse=True``) the
+        saved block plans — no ``pack_model`` at startup."""
+        packed = artifact.packed if sparse else None
+        return cls(artifact.params, artifact.cfg, max_seq=max_seq,
+                   packed=packed or None, **kw)
+
     def generate(self, prompt_tokens, n_new: int, temperature: float = 0.0,
                  seed: int = 0):
         """prompt_tokens: (B, S0) -> (B, S0 + n_new)."""

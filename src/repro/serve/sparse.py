@@ -10,6 +10,7 @@ runs in interpret mode (tests assert exact agreement with dense).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional
 
 import jax
@@ -44,16 +45,54 @@ def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
                             density=float(bm.mean()))
 
 
-def pack_model(params, cfg: ModelConfig, block: int = 128) -> dict:
-    """{(layer, name): PackedProjection} for every tileable projection."""
+def pack_model_with_report(params, cfg: ModelConfig,
+                           block: int = 128) -> tuple:
+    """Returns ``(packed, report)``: ``{(layer, name): PackedProjection}``
+    for every tileable projection, plus a summary of what was *not*
+    packed (the silent-``None`` paths), so serve-time coverage is
+    auditable from the artifact report."""
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
-    packed = {}
+    packed: dict = {}
+    skipped: list = []
+    packed_params = 0
     for proj in projections(cfg):
+        w = tree_get(params, proj.path)
+        n = int(np.prod(w.shape))
         if proj.expert_axis is not None:
-            continue                      # expert weights: per-expert plans
-        p = pack_projection(tree_get(params, proj.path), block)
-        if p is not None:
+            # expert weights need per-expert plans (future work)
+            skipped.append({"layer": proj.layer, "name": proj.name,
+                            "params": n, "reason": "expert"})
+            continue
+        p = pack_projection(w, block)
+        if p is None:
+            skipped.append({"layer": proj.layer, "name": proj.name,
+                            "params": n, "reason": "non-tileable"})
+        else:
             packed[proj.key] = p
+            packed_params += n
+    report = {
+        "block": block,
+        "n_packed": len(packed),
+        "packed_params": packed_params,
+        "n_skipped": len(skipped),
+        "skipped_params": sum(s["params"] for s in skipped),
+        "skipped": skipped,
+        "flop_savings": flop_savings(packed),
+    }
+    if skipped:
+        logging.getLogger(__name__).info(
+            "pack_model: skipped %d/%d projections (%d params) — %s",
+            len(skipped), len(skipped) + len(packed),
+            report["skipped_params"],
+            ", ".join(sorted({s["reason"] for s in skipped})))
+    return packed, report
+
+
+def pack_model(params, cfg: ModelConfig, block: int = 128) -> dict:
+    """{(layer, name): PackedProjection} for every tileable projection.
+    Skipped (non-tileable / expert) projections are logged; use
+    :func:`pack_model_with_report` to get the summary programmatically."""
+    packed, _ = pack_model_with_report(params, cfg, block)
     return packed
 
 
@@ -102,3 +141,33 @@ def flop_savings(packed: dict) -> float:
     if not packed:
         return 0.0
     return float(np.mean([1.0 - p.density for p in packed.values()]))
+
+
+# ----------------------------------------------- plan (de)serialization
+# The PrunedArtifact persists the block plans so serve startup rehydrates
+# them instead of re-deriving from raw weights (no pack_model on the
+# serve hot path).
+
+def plans_to_host(packed: dict) -> tuple:
+    """``(arrays, meta)``: flat npz-able arrays + JSON-able metadata."""
+    arrays: dict = {}
+    meta: dict = {}
+    for (layer, name), p in packed.items():
+        key = f"{layer}:{name}"
+        arrays[key + ":counts"] = np.asarray(jax.device_get(p.counts))
+        arrays[key + ":indices"] = np.asarray(jax.device_get(p.indices))
+        meta[key] = {"block": p.block, "density": p.density}
+    return arrays, meta
+
+
+def plans_from_host(arrays: dict, meta: dict) -> dict:
+    """Inverse of :func:`plans_to_host`: rebuild the PackedProjection
+    plans the engines consume."""
+    packed: dict = {}
+    for key, m in meta.items():
+        layer, name = key.split(":")
+        packed[(int(layer), name)] = PackedProjection(
+            counts=jnp.asarray(arrays[key + ":counts"]),
+            indices=jnp.asarray(arrays[key + ":indices"]),
+            block=int(m["block"]), density=float(m["density"]))
+    return packed

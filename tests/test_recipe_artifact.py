@@ -1,0 +1,233 @@
+"""Declarative pipeline API: PruneRecipe JSON round-trip, PrunedArtifact
+save/load fidelity, and prune -> save -> load -> generate producing
+token-identical output vs the in-memory path (dense + sparse engines)."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.tree import iter_paths
+from repro.core.artifact import PrunedArtifact
+from repro.core.pipeline import MosaicPipeline
+from repro.core.prune_controller import (Platform, run_pruning_controller,
+                                         select_category)
+from repro.core.rank_controller import profile_model
+from repro.core.recipe import CalibrationSpec, PruneRecipe
+from repro.core.registry import CATEGORIES, SELECTORS, STAGES
+from repro.models import transformer as T
+from repro.models.specs import (AttentionSpec, LayerSpec, MLPSpec,
+                                ModelConfig, config_from_dict,
+                                config_to_dict)
+from repro.serve.engine import Engine
+from repro.serve.sparse import pack_model_with_report
+from tests.conftest import small_config
+
+
+def tileable_config() -> ModelConfig:
+    # dims multiples of the block (16) so the pack stage has real plans
+    attn = AttentionSpec(n_q=4, n_kv=2, head_dim=32)
+    return ModelConfig(name="recipe-test", d_model=128, vocab=256,
+                       vocab_pad_multiple=16,
+                       pattern=(LayerSpec(attn, MLPSpec(d_ff=256)),),
+                       n_periods=2, scan_layers=False, remat=False)
+
+
+@pytest.fixture(scope="module")
+def artifact(tmp_path_factory):
+    cfg = tileable_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    recipe = PruneRecipe(arch=cfg.name, p=0.6, category="composite",
+                         selector="wanda_block", align_channels=16,
+                         block=16,
+                         calibration=CalibrationSpec(4, 2, 16))
+    art = MosaicPipeline(recipe).run(params, cfg)
+    d = str(tmp_path_factory.mktemp("bundle"))
+    art.save(d)
+    return art, PrunedArtifact.load(d)
+
+
+# ------------------------------------------------------------- recipe
+
+def test_recipe_json_roundtrip():
+    r = PruneRecipe(arch="llama3-8b", p=0.55, category=None,
+                    granularity="layer", selector="sparsegpt",
+                    structured_share=0.3, align_heads=2, align_channels=32,
+                    platform="edge", block=64,
+                    calibration=CalibrationSpec(16, 4, 128, seed=7),
+                    stages=("rank", "plan", "prune"))
+    assert PruneRecipe.from_json(r.to_json()) == r
+    # dict round-trip through real JSON (tuples become lists)
+    assert PruneRecipe.from_dict(json.loads(json.dumps(r.to_dict()))) == r
+
+
+def test_recipe_validation():
+    with pytest.raises(ValueError):
+        PruneRecipe(arch="a", p=1.2)
+    with pytest.raises(ValueError):
+        PruneRecipe(arch="a", p=0.5, granularity="per-weight")
+    with pytest.raises(ValueError):
+        PruneRecipe(arch="a", p=0.5, structured_share=1.5)
+    with pytest.raises(ValueError):
+        PruneRecipe.from_dict({"arch": "a", "p": 0.5, "bogus": 1})
+
+
+def test_recipe_file_roundtrip(tmp_path):
+    r = PruneRecipe(arch="gemma-2b", p=0.4)
+    path = str(tmp_path / "r.json")
+    r.save(path)
+    assert PruneRecipe.load(path) == r
+
+
+def test_config_dict_roundtrip():
+    cfg = small_config(moe=True, mamba=True)
+    through_json = json.loads(json.dumps(config_to_dict(cfg)))
+    assert config_from_dict(through_json) == cfg
+
+
+# ----------------------------------------------------------- registry
+
+def test_registries_populated():
+    for name in ("magnitude", "wanda", "wanda_block", "sparsegpt"):
+        assert name in SELECTORS
+    for name in ("unstructured", "structured", "composite"):
+        assert name in CATEGORIES
+    for name in ("rank", "plan", "prune", "pack", "report"):
+        assert name in STAGES
+
+
+def test_unknown_stage_fails_fast():
+    r = PruneRecipe(arch="a", p=0.5, stages=("rank", "quantize"))
+    with pytest.raises(KeyError):
+        MosaicPipeline(r)
+
+
+def test_plan_without_rank_raises():
+    cfg = small_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    r = PruneRecipe(arch="a", p=0.5, stages=("plan",))
+    with pytest.raises(RuntimeError):
+        MosaicPipeline(r).run(params, cfg)
+
+
+# ----------------------------------------------------------- category
+
+def test_select_category_uses_structured_share():
+    plat = Platform("mid", 8 << 30)
+    dense = 10 << 30
+    # share 0.5 at p=0.5 -> composite fits (7.5G); share 0.2 -> 9G > 8G
+    assert select_category(plat, dense, 0.5, structured_share=0.5) == \
+        "composite"
+    assert select_category(plat, dense, 0.5, structured_share=0.2) == \
+        "structured"
+
+
+# ------------------------------------------------------------ artifact
+
+def test_artifact_roundtrip_fields(artifact):
+    art, loaded = artifact
+    assert loaded.recipe == art.recipe
+    assert loaded.cfg == art.cfg
+    assert loaded.targets == pytest.approx(art.targets)
+    assert set(loaded.packed) == set(art.packed)
+    for k, p in art.packed.items():
+        lp = loaded.packed[k]
+        assert lp.block == p.block and lp.density == p.density
+        np.testing.assert_array_equal(np.asarray(lp.counts),
+                                      np.asarray(p.counts))
+        np.testing.assert_array_equal(np.asarray(lp.indices),
+                                      np.asarray(p.indices))
+    for (p1, l1), (p2, l2) in zip(iter_paths(art.params),
+                                  iter_paths(loaded.params)):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    assert loaded.report["category"] == "composite"
+    assert loaded.report["prune_seconds"] > 0
+    json.dumps(loaded.report)           # report stays JSON-clean
+
+
+def test_artifact_pack_report_exposes_skips(artifact):
+    art, loaded = artifact
+    pk = loaded.report["pack"]
+    # the o projection folds to (n_q, head_dim*d_model): K not tileable
+    assert pk["n_skipped"] >= 1
+    assert pk["skipped_params"] > 0
+    assert {s["reason"] for s in pk["skipped"]} <= {"non-tileable", "expert"}
+    assert pk["n_packed"] == len(loaded.packed)
+
+
+def test_load_rejects_non_artifact(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        PrunedArtifact.load(str(tmp_path / "nope"))
+
+
+# ----------------------------------- token-identical serve (the payoff)
+
+def _generate(params, cfg, packed, prompt, n_new=8):
+    eng = Engine(params, cfg, max_seq=prompt.shape[1] + n_new,
+                 compute_dtype=jnp.float32, cache_dtype=jnp.float32,
+                 packed=packed)
+    return np.asarray(eng.generate(prompt, n_new))
+
+
+def test_loaded_artifact_serves_token_identical(artifact):
+    art, loaded = artifact
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                art.cfg.vocab)
+    # dense engines: in-memory pruned model vs loaded artifact
+    dense_mem = _generate(art.params, art.cfg, None, prompt)
+    dense_loaded = _generate(loaded.params, loaded.cfg, None, prompt)
+    np.testing.assert_array_equal(dense_mem, dense_loaded)
+    # sparse engines (interpret mode): saved plans vs in-memory plans,
+    # and sparse-from-artifact vs dense-in-memory
+    sparse_mem = _generate(art.params, art.cfg, art.packed, prompt)
+    sparse_loaded = _generate(loaded.params, loaded.cfg, loaded.packed,
+                              prompt)
+    np.testing.assert_array_equal(sparse_mem, sparse_loaded)
+    np.testing.assert_array_equal(dense_mem, sparse_loaded)
+
+
+def test_engine_from_artifact_uses_saved_plans(artifact):
+    _, loaded = artifact
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0,
+                                loaded.cfg.vocab)
+    eng = Engine.from_artifact(loaded, max_seq=16,
+                               compute_dtype=jnp.float32,
+                               cache_dtype=jnp.float32)
+    out = np.asarray(eng.generate(prompt, 4))
+    ref = _generate(loaded.params, loaded.cfg, loaded.packed, prompt,
+                    n_new=4)
+    np.testing.assert_array_equal(out, ref)
+
+
+# ------------------------------------------------------------- shims
+
+def test_controller_shim_matches_pipeline():
+    cfg = small_config(moe=True)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    batches = [jax.random.randint(jax.random.PRNGKey(i), (2, 16), 0,
+                                  cfg.vocab) for i in range(2)]
+    ra = profile_model(params, cfg, batches)
+    res = run_pruning_controller(params, cfg, ra, 0.5, category="composite")
+    recipe = PruneRecipe(arch=cfg.name, p=0.5, category="composite",
+                         stages=("plan", "prune", "report"))
+    art = MosaicPipeline(recipe).run(params, cfg, rank_artifact=ra)
+    assert res.category == art.report["category"] == "composite"
+    assert res.cfg == art.cfg
+    for (p1, l1), (p2, l2) in zip(iter_paths(res.params),
+                                  iter_paths(art.params)):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_pack_model_with_report_counts():
+    cfg = small_config()            # d_model=64, d_ff=128: tileable @16
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    packed, report = pack_model_with_report(params, cfg, block=16)
+    assert report["n_packed"] == len(packed)
+    assert report["n_packed"] + report["n_skipped"] > 0
+    assert report["packed_params"] > 0
+    total = {f.name for f in dataclasses.fields(PruneRecipe)}
+    assert "block" in total         # recipe carries the pack block size
