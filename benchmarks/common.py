@@ -7,7 +7,6 @@ reproduction targets (see EXPERIMENTS.md §Quality).
 """
 from __future__ import annotations
 
-import math
 import os
 import time
 
@@ -17,6 +16,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_config
+from repro.core import evaluate as EV
 from repro.core.rank_controller import RankArtifact, run_ranking_controller
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
@@ -62,42 +62,22 @@ def get_trained_model(steps: int = TRAIN_STEPS):
 
 def perplexity(params, cfg, c: SyntheticCorpus, n_batches: int = 6,
                start: int = 5000) -> float:
-    tot = 0.0
-    for tokens, labels in c.batches(8, SEQ, start=start, n=n_batches):
-        logits, _, _ = T.forward(params, cfg, tokens,
-                                 compute_dtype=jnp.float32)
-        tot += float(T.cross_entropy(logits, labels, cfg.vocab))
-    return math.exp(tot / n_batches)
+    """Thin corpus adapter over :mod:`repro.core.evaluate`."""
+    return EV.perplexity(params, cfg,
+                         c.batches(8, SEQ, start=start, n=n_batches))
 
 
 def accuracy(params, cfg, c: SyntheticCorpus, n_batches: int = 4,
              start: int = 6000) -> float:
     """Mean zero-shot next-token accuracy over three held-out "tasks"
     (top-1, top-5, and a shifted-start-distribution split) — the
-    small-scale stand-in for the paper's 7-dataset mean."""
-    accs = []
-    top1 = top5 = n = 0
-    for tokens, labels in c.batches(8, SEQ, start=start, n=n_batches):
-        logits, _, _ = T.forward(params, cfg, tokens,
-                                 compute_dtype=jnp.float32)
-        logits = logits[..., :cfg.vocab]
-        pred = jnp.argmax(logits, -1)
-        top1 += float((pred == labels).mean())
-        top5 += float((jax.lax.top_k(logits, 5)[1]
-                       == labels[..., None]).any(-1).mean())
-        n += 1
-    accs.extend([100 * top1 / n, 100 * top5 / n])
-    c2 = SyntheticCorpus(VOCAB, seed=0)          # same chains
-    c2.start_probs = np.roll(c2.start_probs, 7)  # shifted start split
-    t1 = m = 0
-    for tokens, labels in c2.batches(8, SEQ, start=start, n=n_batches):
-        logits, _, _ = T.forward(params, cfg, tokens,
-                                 compute_dtype=jnp.float32)
-        pred = jnp.argmax(logits[..., :cfg.vocab], -1)
-        t1 += float((pred == labels).mean())
-        m += 1
-    accs.append(100 * t1 / m)
-    return float(np.mean(accs))
+    small-scale stand-in for the paper's 7-dataset mean. Implementation
+    (incl. the shifted-split construction) lives in
+    :mod:`repro.core.evaluate` (the pipeline quality stage)."""
+    spec = EV.EvalSpec(batch_size=8, seq_len=SEQ, n_ppl=0,
+                       n_acc=n_batches, acc_start=start, seed=c.seed)
+    b = EV.synthetic_eval_batches(VOCAB, spec)
+    return EV.accuracy(params, cfg, b["acc"], b["shifted"])
 
 
 def rank_artifact(params, cfg, c: SyntheticCorpus, n_samples: int = 32,

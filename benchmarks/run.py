@@ -38,7 +38,7 @@ def main() -> None:
 
     from benchmarks import (composite, finetune, kernel_bench, overheads,
                             prune_pipeline, quality, quant_compare,
-                            serve_bench)
+                            serve_bench, sweep_bench)
 
     sections = []
     rows = []
@@ -52,6 +52,7 @@ def main() -> None:
         ("kernel_bench", lambda: kernel_bench.main(fast)),
         ("serve_bench", lambda: serve_bench.main(fast)),
         ("prune_pipeline", lambda: prune_pipeline.main(fast)),
+        ("recipe_sweep", lambda: sweep_bench.main(fast)),
     ]:
         nm, us, result, text = _timed(name, fn)
         derived = _derive(name, result)
@@ -135,6 +136,12 @@ def _derive(name: str, result) -> str:
         if name == "prune_pipeline":
             return ";".join(f"{r['arch']}={r['seconds']:.1f}s"
                             for r in result)
+        if name == "recipe_sweep":
+            front = [r for r in result if r["pareto"]]
+            best = max(result,
+                       key=lambda r: r["quality_per_byte"] or 0.0)
+            return (f"points={len(result)};pareto={len(front)}"
+                    f";best_qpb={best['quality_per_byte']:.3f}")
     except Exception as e:                            # noqa: BLE001
         return f"derive-error:{e!r}"
     return "-"

@@ -1,0 +1,38 @@
+"""Recipe-sweep benchmark: the E5 reuse win as a quality/size Pareto.
+
+One RC profile of the trained bench model fans across a p x category
+grid (``repro.core.sweep.run_sweep``); the resulting table is the
+repo-scale analogue of the paper's multi-configuration claim — profiling
+amortises to ~0 per extra configuration, and every point carries
+ppl / acc / bytes_after so the trade-off is explicit, not assumed.
+"""
+from __future__ import annotations
+
+from benchmarks.common import SEQ, get_trained_model
+from repro.core.recipe import CalibrationSpec, PruneRecipe
+from repro.core.sweep import GridSpec, pareto_markdown, run_sweep
+
+FAST_GRID = GridSpec(p=(0.4, 0.7), category=("unstructured", "composite"))
+FULL_GRID = GridSpec(p=(0.2, 0.4, 0.6, 0.8),
+                     category=("unstructured", "structured", "composite"))
+
+
+def main(fast: bool = True) -> list:
+    cfg, params, c = get_trained_model()
+    base = PruneRecipe(arch=cfg.name, p=0.5, category="composite",
+                       selector="wanda_block", align_channels=8, block=16,
+                       calibration=CalibrationSpec(n_samples=16,
+                                                   batch_size=8,
+                                                   seq_len=SEQ))
+    calib = c.calibration_batches(16, 8, SEQ)
+    res = run_sweep(base, FAST_GRID if fast else FULL_GRID, params, cfg,
+                    calibration=calib)
+    n_pareto = sum(1 for r in res.rows if r["pareto"])
+    print(f"profile: once ({res.rank_artifact.profile_seconds:.2f}s) for "
+          f"{len(res.rows)} points; {n_pareto} on the Pareto front")
+    print(pareto_markdown(res.rows))
+    return res.rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

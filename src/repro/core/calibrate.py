@@ -44,6 +44,11 @@ def calibrate(params, cfg: ModelConfig, batches: Iterable[jax.Array],
 
     mode='ssq'    -> {(layer, tap): per-channel sum of squares}
     mode='hessian'-> {(layer, tap): X^T X Gram matrix}
+    mode='both'   -> {(layer, tap): (ssq, X^T X)} in ONE pass (see
+                     :func:`split_stats`) — the profile-once path when
+                     Hessians are also wanted.
+    ``batches`` may be any iterable (including a generator): it is
+    consumed exactly once.
     Returns (stats, n_tokens).
     """
     step = jax.jit(functools.partial(_forward_stats, cfg=cfg, mode=mode),
@@ -58,6 +63,12 @@ def calibrate(params, cfg: ModelConfig, batches: Iterable[jax.Array],
         else:
             total = jax.tree.map(jnp.add, total, stats)
     return total, n_tokens
+
+
+def split_stats(both: dict) -> tuple:
+    """mode='both' stats -> (ssq stats, hessian stats)."""
+    return ({k: v[0] for k, v in both.items()},
+            {k: v[1] for k, v in both.items()})
 
 
 def activation_norms(stats: dict) -> dict:

@@ -21,6 +21,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.common.tree import param_bytes, param_count
+from repro.core import evaluate as _EV        # noqa: F401 (registers stage)
 from repro.core import planner as PL
 from repro.core import prune_controller as PC
 from repro.core.artifact import PrunedArtifact
@@ -39,6 +40,8 @@ class PipelineContext:
     calibration: Optional[list] = None
     platform: Optional[PC.Platform] = None
     rank_artifact: Optional[RankArtifact] = None
+    eval_batches: Optional[dict] = None   # held-out set for 'evaluate'
+    quality: Optional[dict] = None        # {'ppl': ..., 'acc': ...}
     targets: Optional[dict] = None
     category: Optional[str] = None
     info: dict = dataclasses.field(default_factory=dict)
@@ -126,6 +129,8 @@ def stage_report(ctx: PipelineContext) -> None:
         "pipeline_seconds": round(sum(ctx.timings.values()), 6),
         "recipe": r.to_dict(),
     })
+    if ctx.quality:                       # 'evaluate' ran before 'report'
+        ctx.report.update(ctx.quality)
 
 
 def _jsonable(obj):
@@ -156,11 +161,13 @@ class MosaicPipeline:
     def run(self, params, cfg: ModelConfig, *,
             calibration: Optional[list] = None,
             rank_artifact: Optional[RankArtifact] = None,
+            eval_batches: Optional[dict] = None,
             platform: Optional[PC.Platform] = None) -> PrunedArtifact:
         cfg = cfg if not cfg.scan_layers else cfg.unrolled()
         ctx = PipelineContext(
             recipe=self.recipe, params=params, cfg=cfg,
             calibration=calibration, rank_artifact=rank_artifact,
+            eval_batches=eval_batches,
             platform=platform, dense_params=param_count(params),
             dense_bytes=param_bytes(params))
         for name in self.stage_names:

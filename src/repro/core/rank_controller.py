@@ -2,21 +2,35 @@
 
 Profiles the LLM once over a calibration set and emits the reusable global
 rank R_LLM. One profile serves every pruning level p and every pruning
-category (the paper's key overhead win, E5).
+category (the paper's key overhead win, E5) — and, via
+:meth:`RankArtifact.save` / :meth:`RankArtifact.load`, every future
+*process*: a profile is a first-class on-disk artifact that
+``launch/sweep.py`` fans across whole recipe grids.
+
+Profiling is single-pass: when SparseGPT Hessians are wanted the
+calibration forward collects both the POD ssq stats and the Gram
+matrices in one sweep (tap mode ``both``); a profile taken without
+Hessians can have them attached later with :func:`ensure_hessians`.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Iterable, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core import calibrate as C
 from repro.core import pod
 from repro.core.registry import projections
 from repro.common.tree import tree_get
 from repro.models.specs import ModelConfig
+
+PROFILE_FILE = "profile.json"
+PROFILE_ARRAYS = "profile.npz"
 
 
 @dataclasses.dataclass
@@ -29,28 +43,114 @@ class RankArtifact:
     profile_seconds: float
     hessians: Optional[dict] = None     # only when sparsegpt requested
 
+    # ----------------------------------------------------------- save/load
+    # Layout: <dir>/profile.npz (rank/anorms/hessians arrays, keys
+    # "<group>/<layer>:<name>") + profile.json (weights, token count,
+    # timing). Writes are atomic via the CheckpointManager sidecar API.
+
+    def save(self, directory: str) -> str:
+        mgr = CheckpointManager(directory, keep=1)
+        arrays = {}
+        for (layer, name), v in self.rank.items():
+            arrays[f"rank/{layer}:{name}"] = np.asarray(v)
+        for (layer, tap), v in self.anorms.items():
+            arrays[f"anorms/{layer}:{tap}"] = np.asarray(v)
+        if self.hessians is not None:
+            for (layer, tap), v in self.hessians.items():
+                arrays[f"hessians/{layer}:{tap}"] = np.asarray(v)
+        mgr.save_arrays(PROFILE_ARRAYS, arrays)
+        mgr.save_json(PROFILE_FILE, {
+            "kind": "rank_artifact",
+            "n_tokens": int(self.n_tokens),
+            "profile_seconds": float(self.profile_seconds),
+            "has_hessians": self.hessians is not None,
+            "weights": [[layer, name, int(v)] for (layer, name), v
+                        in sorted(self.weights.items())],
+        })
+        return directory
+
+    @staticmethod
+    def is_artifact(directory: str) -> bool:
+        return (os.path.isdir(directory)
+                and os.path.exists(os.path.join(directory, PROFILE_FILE))
+                and os.path.exists(os.path.join(directory, PROFILE_ARRAYS)))
+
+    @classmethod
+    def load(cls, directory: str) -> "RankArtifact":
+        if not cls.is_artifact(directory):
+            raise FileNotFoundError(
+                f"{directory!r} is not a RankArtifact bundle "
+                f"(missing {PROFILE_FILE}/{PROFILE_ARRAYS})")
+        mgr = CheckpointManager(directory, keep=1)
+        meta = mgr.load_json(PROFILE_FILE)
+        rank, anorms, hessians = {}, {}, {}
+        for key, arr in mgr.load_arrays(PROFILE_ARRAYS).items():
+            group, rest = key.split("/", 1)
+            layer, name = rest.split(":", 1)
+            k = (int(layer), name)
+            if group == "rank":
+                # scalar ranks round-trip as 0-d arrays -> back to float
+                rank[k] = float(arr) if arr.ndim == 0 else arr
+            elif group == "anorms":
+                anorms[k] = jnp.asarray(arr)
+            elif group == "hessians":
+                hessians[k] = jnp.asarray(arr)
+        weights = {(int(layer), name): int(v)
+                   for layer, name, v in meta["weights"]}
+        return cls(rank=rank, anorms=anorms, weights=weights,
+                   n_tokens=int(meta["n_tokens"]),
+                   profile_seconds=float(meta["profile_seconds"]),
+                   hessians=hessians if meta["has_hessians"] else None)
+
 
 def profile_model(params, cfg: ModelConfig,
                   calibration_batches: Iterable,
                   alpha: float = pod.DEFAULT_ALPHA,
                   want_hessians: bool = False) -> RankArtifact:
     """RC profiling (the pipeline's ``rank`` stage): one calibration pass
-    over the model emits the reusable global rank R_LLM."""
+    over the model emits the reusable global rank R_LLM.
+
+    Single-pass even with ``want_hessians``: the forward collects the ssq
+    stats and the SparseGPT Grams together (tap mode ``both``), so the
+    calibration iterable is consumed exactly once and never materialised
+    a second time.
+    """
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
     t0 = time.perf_counter()
-    batches = list(calibration_batches)
-    stats, n_tokens = C.calibrate(params, cfg, batches, mode="ssq")
+    mode = "both" if want_hessians else "ssq"
+    stats, n_tokens = C.calibrate(params, cfg, calibration_batches,
+                                  mode=mode)
+    hessians = None
+    if want_hessians:
+        stats, hessians = C.split_stats(stats)
     anorms = C.activation_norms(stats)
     rank = pod.global_rank(params, cfg, anorms, alpha=alpha)
     weights = {p.key: int(np.prod(tree_get(params, p.path).shape))
                for p in projections(cfg)}
-    hessians = None
-    if want_hessians:
-        hessians, _ = C.calibrate(params, cfg, batches, mode="hessian")
     return RankArtifact(rank=rank, anorms=anorms, weights=weights,
                         n_tokens=n_tokens,
                         profile_seconds=time.perf_counter() - t0,
                         hessians=hessians)
+
+
+def ensure_hessians(artifact: RankArtifact, params, cfg: ModelConfig,
+                    calibration_batches: Iterable) -> RankArtifact:
+    """Lazily attach SparseGPT Hessians to a Hessian-free profile.
+
+    The sweep path profiles once without Hessians and only pays the Gram
+    accumulation when a ``sparsegpt`` recipe point actually appears. The
+    input artifact is not mutated; a no-op when Hessians are present.
+    """
+    if artifact.hessians is not None:
+        return artifact
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    t0 = time.perf_counter()
+    hessians, _ = C.calibrate(params, cfg, calibration_batches,
+                              mode="hessian")
+    return dataclasses.replace(
+        artifact, hessians=hessians,
+        profile_seconds=artifact.profile_seconds
+        + (time.perf_counter() - t0))
 
 
 def run_ranking_controller(params, cfg: ModelConfig,

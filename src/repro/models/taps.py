@@ -16,11 +16,33 @@ _COLLECTOR: Optional[list] = None
 _MODE: str = "ssq"
 
 
+def _ssq_stat(x32, reduce_axes):
+    return jnp.sum(jnp.square(x32), axis=reduce_axes)
+
+
+def _gram_stat(x32, x_shape, keep, expert_first: bool):
+    if expert_first:
+        # per-expert Hessian: (..., E, ..., d) -> (E, d, d)
+        xe = jnp.moveaxis(x32, keep[0], 0)
+        dims = 1
+        for a in keep[1:]:
+            dims *= x_shape[a]
+        flat = xe.reshape(xe.shape[0], -1, dims)
+        return jnp.einsum("ecd,ecf->edf", flat, flat)
+    dims = 1
+    for a in keep:
+        dims *= x_shape[a]
+    flat = x32.reshape(-1, dims)
+    return flat.T @ flat
+
+
 def tap(name: str, x, channel_axes=(-1,), expert_first: bool = False) -> None:
     """Record a statistic of ``x`` over all non-channel axes.
 
     mode 'ssq': per-channel sum of squares (-> ||A||_2 for Eq. 5).
     mode 'hessian': X^T X over flattened channel axes (SparseGPT).
+    mode 'both': (ssq, X^T X) tuple — one forward pass supplies both the
+    POD ranking stats and the SparseGPT Hessians (profile-once).
     channel_axes: axes kept (the projection's input-feature axes); all
     other axes (batch / seq / capacity) are reduced. expert_first: the
     first channel axis is a category (per-expert stats), not a feature.
@@ -31,26 +53,14 @@ def tap(name: str, x, channel_axes=(-1,), expert_first: bool = False) -> None:
     reduce_axes = tuple(a for a in range(x.ndim) if a not in keep)
     x32 = x.astype(jnp.float32)
     if _MODE == "ssq":
-        stat = jnp.sum(jnp.square(x32), axis=reduce_axes)
+        stat = _ssq_stat(x32, reduce_axes)
+    elif _MODE == "hessian":
+        stat = _gram_stat(x32, x.shape, keep, expert_first)
+    elif _MODE == "both":
+        stat = (_ssq_stat(x32, reduce_axes),
+                _gram_stat(x32, x.shape, keep, expert_first))
     else:
-        if expert_first:
-            # per-expert Hessian: (..., E, ..., d) -> (E, d, d)
-            e_ax, feat_axes = keep[0], keep[1:]
-            xe = jnp.moveaxis(x32, e_ax, 0)
-            feat_axes = [a if a < e_ax else a for a in feat_axes]
-            dims = 1
-            for a in keep[1:]:
-                dims *= x.shape[a]
-            # move feature axes last, flatten the middle
-            xe = jnp.moveaxis(xe, -1, -1)
-            flat = xe.reshape(xe.shape[0], -1, dims)
-            stat = jnp.einsum("ecd,ecf->edf", flat, flat)
-        else:
-            dims = 1
-            for a in keep:
-                dims *= x.shape[a]
-            flat = x32.reshape(-1, dims)
-            stat = flat.T @ flat
+        raise ValueError(f"unknown tap mode {_MODE!r}")
     _COLLECTOR.append((name, stat))
 
 

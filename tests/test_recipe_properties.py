@@ -1,0 +1,127 @@
+"""Property-based tests over the recipe -> artifact pipeline surface:
+PruneRecipe JSON round-trips for arbitrary valid field combinations, and
+plan_from_recipe invariants (targets bounded, pruned fraction monotone
+in p). Runs under real hypothesis when installed, else the seeded
+fallback shim in tests/_hypothesis_compat.py."""
+import json
+
+from repro.core.planner import plan_from_recipe
+from repro.core.recipe import GRANULARITIES, CalibrationSpec, PruneRecipe
+from tests._hypothesis_compat import given, settings, st
+
+SELECTOR_NAMES = ("magnitude", "wanda", "wanda_block", "sparsegpt")
+CATEGORY_NAMES = (None, "unstructured", "structured", "composite")
+STAGE_SUBSETS = (
+    ("rank", "plan", "prune", "pack", "report"),
+    ("rank", "plan", "prune", "evaluate", "report"),
+    ("plan", "prune", "report"),
+    ("rank", "plan", "prune"),
+)
+
+
+# ------------------------------------------------------- JSON round-trip
+
+@settings(max_examples=25)
+@given(st.floats(min_value=0.0, max_value=0.99),
+       st.integers(min_value=0, max_value=len(GRANULARITIES) - 1),
+       st.integers(min_value=0, max_value=len(SELECTOR_NAMES) - 1),
+       st.integers(min_value=0, max_value=len(CATEGORY_NAMES) - 1),
+       st.integers(min_value=0, max_value=len(STAGE_SUBSETS) - 1),
+       st.floats(min_value=0.0, max_value=1.0),
+       st.floats(min_value=0.0, max_value=0.9),
+       st.floats(min_value=0.0, max_value=0.9),
+       st.integers(min_value=1, max_value=8),
+       st.integers(min_value=1, max_value=128),
+       st.integers(min_value=1, max_value=256),
+       st.integers(min_value=1, max_value=512),
+       st.integers(min_value=1, max_value=64),
+       st.integers(min_value=1, max_value=512),
+       st.integers(min_value=0, max_value=10**6))
+def test_recipe_json_roundtrip_property(p, gi, si, ci, sti, share, spread,
+                                        wspread, heads, chans, block,
+                                        n_samples, batch, seq, seed):
+    r = PruneRecipe(
+        arch="llama3-8b", p=p,
+        category=CATEGORY_NAMES[ci],
+        granularity=GRANULARITIES[gi],
+        selector=SELECTOR_NAMES[si],
+        spread=spread, within_spread=wspread,
+        structured_share=share,
+        align_heads=heads, align_channels=chans,
+        per_output=bool(seed % 2), block=block,
+        calibration=CalibrationSpec(n_samples=n_samples, batch_size=batch,
+                                    seq_len=seq, seed=seed),
+        stages=STAGE_SUBSETS[sti])
+    assert PruneRecipe.from_json(r.to_json()) == r
+    # and through real JSON serialisation of the dict form (tuples->lists)
+    assert PruneRecipe.from_dict(json.loads(json.dumps(r.to_dict()))) == r
+
+
+# --------------------------------------------------------- plan invariants
+
+def _rank_and_weights(values):
+    """Synthetic profile: two projections per layer from drawn values."""
+    rank = {}
+    weights = {}
+    for i, v in enumerate(values):
+        key = (i // 2, ("q", "up")[i % 2])
+        rank[key] = float(v)
+        weights[key] = 64 + 13 * i
+    return rank, weights
+
+
+def _pruned_fraction(targets, weights):
+    tot = sum(weights.values())
+    return sum(t * weights[k] for k, t in targets.items()) / tot
+
+
+@settings(max_examples=20)
+@given(st.lists(st.floats(min_value=0.01, max_value=10.0),
+                min_size=4, max_size=12),
+       st.floats(min_value=0.0, max_value=0.9),
+       st.floats(min_value=0.0, max_value=0.9),
+       st.integers(min_value=0, max_value=len(GRANULARITIES) - 1),
+       st.floats(min_value=0.0, max_value=0.5),
+       st.floats(min_value=0.0, max_value=0.5))
+def test_plan_targets_bounded_and_monotone(values, p_a, p_b, gi, spread,
+                                           wspread):
+    rank, weights = _rank_and_weights(values)
+    lo, hi = sorted((p_a, p_b))
+    recipe = PruneRecipe(arch="t", p=lo, granularity=GRANULARITIES[gi],
+                         spread=spread, within_spread=wspread)
+    fracs = []
+    for p in (lo, hi):
+        targets = plan_from_recipe(rank, recipe.replace(p=p),
+                                   weights=weights)
+        assert set(targets) == set(rank)
+        for t in targets.values():
+            assert 0.0 <= t <= 1.0, targets
+        fracs.append(_pruned_fraction(targets, weights))
+    # total pruned-parameter fraction is monotone non-decreasing in p
+    assert fracs[1] >= fracs[0] - 1e-6, (lo, hi, fracs)
+
+
+@settings(max_examples=15)
+@given(st.lists(st.floats(min_value=0.01, max_value=10.0),
+                min_size=4, max_size=10),
+       st.floats(min_value=0.05, max_value=0.85),
+       st.floats(min_value=0.0, max_value=0.5))
+def test_plan_weighted_mean_hits_p(values, p, spread):
+    """Eq. 1/2: the param-weighted mean target equals p (all granularities
+    stay inside the clipping regime for these ranges)."""
+    rank, weights = _rank_and_weights(values)
+    for g in GRANULARITIES:
+        recipe = PruneRecipe(arch="t", p=p, granularity=g, spread=spread)
+        targets = plan_from_recipe(rank, recipe, weights=weights)
+        frac = _pruned_fraction(targets, weights)
+        assert abs(frac - p) < 5e-2, (g, p, frac)
+
+
+def test_recipe_rejects_out_of_range_combinations():
+    for bad in (dict(p=1.0), dict(p=-0.1), dict(structured_share=2.0),
+                dict(granularity="row"), dict(block=0)):
+        try:
+            PruneRecipe(arch="a", **{"p": 0.5, **bad})
+        except ValueError:
+            continue
+        raise AssertionError(f"accepted invalid recipe: {bad}")

@@ -1,0 +1,302 @@
+"""Sweep subsystem: RankArtifact save/load fidelity, single-pass
+profiling, profile-once/prune-many regression (incl. token-identical
+1-point sweep vs a direct pipeline run on both serve paths), and the
+Pareto report contract."""
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.sweep as sweep_mod
+from repro.common.tree import iter_paths
+from repro.core.artifact import PrunedArtifact
+from repro.core.pipeline import MosaicPipeline
+from repro.core.rank_controller import (RankArtifact, ensure_hessians,
+                                        profile_model)
+from repro.core.recipe import CalibrationSpec, PruneRecipe
+from repro.core.sweep import (GridSpec, annotate_pareto, pareto_csv,
+                              point_label, run_sweep)
+from repro.models import transformer as T
+from repro.serve.engine import Engine
+from tests.conftest import small_config
+
+
+def _calib(cfg, n=2, batch=2, seq=16):
+    return [jax.random.randint(jax.random.PRNGKey(100 + i), (batch, seq),
+                               0, cfg.vocab) for i in range(n)]
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = small_config()           # d_model=64, d_ff=128: tileable @16
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def base_recipe(cfg, **kw):
+    kw.setdefault("p", 0.5)
+    kw.setdefault("category", "composite")
+    kw.setdefault("selector", "wanda_block")
+    kw.setdefault("align_channels", 16)
+    kw.setdefault("block", 16)
+    kw.setdefault("calibration", CalibrationSpec(4, 2, 16))
+    return PruneRecipe(arch=cfg.name, **kw)
+
+
+# -------------------------------------------------- RankArtifact on disk
+
+def test_rank_artifact_roundtrip_with_hessians(model, tmp_path):
+    cfg, params = model
+    ra = profile_model(params, cfg, _calib(cfg), want_hessians=True)
+    d = str(tmp_path / "profile")
+    ra.save(d)
+    assert RankArtifact.is_artifact(d)
+    lr = RankArtifact.load(d)
+    assert lr.n_tokens == ra.n_tokens
+    assert lr.weights == ra.weights
+    assert lr.profile_seconds == pytest.approx(ra.profile_seconds)
+    assert set(lr.rank) == set(ra.rank)
+    for k, v in ra.rank.items():
+        assert isinstance(lr.rank[k], float) == isinstance(v, float)
+        np.testing.assert_array_equal(np.asarray(lr.rank[k]),
+                                      np.asarray(v))
+    assert set(lr.anorms) == set(ra.anorms)
+    for k in ra.anorms:
+        np.testing.assert_array_equal(np.asarray(lr.anorms[k]),
+                                      np.asarray(ra.anorms[k]))
+    assert lr.hessians is not None and set(lr.hessians) == set(ra.hessians)
+    for k in ra.hessians:
+        np.testing.assert_array_equal(np.asarray(lr.hessians[k]),
+                                      np.asarray(ra.hessians[k]))
+
+
+def test_rank_artifact_roundtrip_without_hessians(model, tmp_path):
+    cfg, params = model
+    ra = profile_model(params, cfg, _calib(cfg))
+    d = str(tmp_path / "nohess")
+    ra.save(d)
+    lr = RankArtifact.load(d)
+    assert lr.hessians is None
+    assert lr.rank == pytest.approx(ra.rank)
+
+
+def test_rank_artifact_load_rejects_non_bundle(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        RankArtifact.load(str(tmp_path / "missing"))
+
+
+def test_loaded_profile_drives_sparsegpt_identically(model, tmp_path):
+    cfg, params = model
+    ra = profile_model(params, cfg, _calib(cfg), want_hessians=True)
+    d = str(tmp_path / "sg")
+    ra.save(d)
+    loaded = RankArtifact.load(d)
+    recipe = base_recipe(cfg, category="unstructured", selector="sparsegpt",
+                         stages=("plan", "prune", "report"))
+    a1 = MosaicPipeline(recipe).run(params, cfg, rank_artifact=ra)
+    a2 = MosaicPipeline(recipe).run(params, cfg, rank_artifact=loaded)
+    for (p1, l1), (p2, l2) in zip(iter_paths(a1.params),
+                                  iter_paths(a2.params)):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+# ------------------------------------------------- single-pass profiling
+
+def test_profile_single_calibration_pass(model, monkeypatch):
+    """want_hessians must NOT trigger a second calibration pass."""
+    cfg, params = model
+    import repro.core.calibrate as C
+    calls = []
+    real = C.calibrate
+
+    def counting(params, cfg, batches, mode="ssq"):
+        calls.append(mode)
+        return real(params, cfg, batches, mode=mode)
+
+    monkeypatch.setattr(C, "calibrate", counting)
+    ra = profile_model(params, cfg, _calib(cfg), want_hessians=True)
+    assert calls == ["both"]
+    assert ra.hessians is not None
+
+
+def test_profile_consumes_generator_once(model):
+    """The calibration iterable is consumed once — a generator works."""
+    cfg, params = model
+    batches = _calib(cfg)
+    ra_gen = profile_model(params, cfg, iter(batches), want_hessians=True)
+    ra_list = profile_model(params, cfg, batches, want_hessians=True)
+    assert ra_gen.n_tokens == ra_list.n_tokens
+    assert ra_gen.rank == pytest.approx(ra_list.rank)
+    for k in ra_list.hessians:
+        np.testing.assert_array_equal(np.asarray(ra_gen.hessians[k]),
+                                      np.asarray(ra_list.hessians[k]))
+
+
+def test_single_pass_matches_separate_passes(model):
+    """Tap mode 'both' == ssq-mode stats + hessian-mode stats exactly."""
+    cfg, params = model
+    batches = _calib(cfg)
+    ra_ssq = profile_model(params, cfg, batches)
+    ra_both = profile_model(params, cfg, batches, want_hessians=True)
+    assert ra_ssq.rank == pytest.approx(ra_both.rank)
+    for k in ra_ssq.anorms:
+        np.testing.assert_array_equal(np.asarray(ra_ssq.anorms[k]),
+                                      np.asarray(ra_both.anorms[k]))
+    lazy = ensure_hessians(ra_ssq, params, cfg, batches)
+    for k in ra_both.hessians:
+        np.testing.assert_array_equal(np.asarray(lazy.hessians[k]),
+                                      np.asarray(ra_both.hessians[k]))
+    # no-op when hessians already present (same object back)
+    assert ensure_hessians(ra_both, params, cfg, batches) is ra_both
+
+
+# ------------------------------------------------------------- grid spec
+
+def test_grid_points_and_json_roundtrip():
+    g = GridSpec(p=(0.3, 0.5), category=("composite", "unstructured"))
+    base = PruneRecipe(arch="x", p=0.9, selector="wanda")
+    pts = g.points(base)
+    assert len(pts) == 4 == g.n_points()
+    assert {r.p for r in pts} == {0.3, 0.5}
+    assert {r.category for r in pts} == {"composite", "unstructured"}
+    assert all(r.selector == "wanda" for r in pts)   # inherited from base
+    assert GridSpec.from_json(g.to_json()) == g
+    with pytest.raises(ValueError):
+        GridSpec.from_dict({"alpha": [1.0]})
+    with pytest.raises(ValueError):          # scalar, not a list of values
+        GridSpec.from_dict({"category": "composite"})
+    with pytest.raises(ValueError):
+        GridSpec.from_dict({"p": 0.5})
+
+
+def test_point_labels_unique_axes():
+    r = PruneRecipe(arch="x", p=0.5, category=None, granularity="layer")
+    assert point_label(r) == "p0.5-auto-wanda-layer"
+
+
+# ------------------------------------------- profile-once / prune-many
+
+def test_sweep_profiles_once_and_reports(model, tmp_path, monkeypatch):
+    cfg, params = model
+    calls = []
+    real = sweep_mod.profile_model
+
+    def counting(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(sweep_mod, "profile_model", counting)
+    out = str(tmp_path / "sweep")
+    grid = GridSpec(p=(0.4, 0.6), category=("composite", "unstructured"))
+    res = run_sweep(base_recipe(cfg), grid, params, cfg, out_dir=out,
+                    calibration=_calib(cfg))
+    assert len(calls) == 1                      # E5: one profile, N points
+    assert res.profiled
+    assert len(res.rows) == 4
+    for row in res.rows:
+        assert row["ppl"] > 0
+        assert 0.0 <= row["acc"] <= 100.0
+        assert row["bytes_after"] > 0
+        assert row["prune_seconds"] is not None
+        assert PrunedArtifact.is_artifact(row["artifact_dir"])
+    assert RankArtifact.is_artifact(os.path.join(out, "profile"))
+    assert any(r["pareto"] for r in res.rows)
+    with open(res.csv_path) as f:
+        rows = list(csv.DictReader(f))
+    assert len(rows) == 4
+    for needed in ("ppl", "acc", "bytes_after", "prune_seconds",
+                   "quality_per_byte", "pareto"):
+        assert all(r[needed] != "" for r in rows), needed
+    assert os.path.exists(res.md_path)
+
+
+def test_sweep_reuses_saved_profile_without_profiling(model, tmp_path,
+                                                      monkeypatch):
+    cfg, params = model
+    ra = profile_model(params, cfg, _calib(cfg))
+    d = str(tmp_path / "profile")
+    ra.save(d)
+    monkeypatch.setattr(sweep_mod, "profile_model",
+                        lambda *a, **k: pytest.fail("re-profiled!"))
+    res = run_sweep(base_recipe(cfg), GridSpec(p=(0.3, 0.6)), params, cfg,
+                    rank_artifact=RankArtifact.load(d),
+                    calibration=_calib(cfg))
+    assert not res.profiled
+    assert len(res.rows) == 2
+
+
+def test_sweep_lazy_hessians_for_sparsegpt_points(model, monkeypatch):
+    """A Hessian-free saved profile gains Hessians lazily (one hessian
+    pass), not via a full re-profile."""
+    cfg, params = model
+    ra = profile_model(params, cfg, _calib(cfg))
+    assert ra.hessians is None
+    monkeypatch.setattr(sweep_mod, "profile_model",
+                        lambda *a, **k: pytest.fail("re-profiled!"))
+    grid = GridSpec(selector=("wanda", "sparsegpt"))
+    res = run_sweep(base_recipe(cfg, category="unstructured",
+                                stages=("rank", "plan", "prune", "report")),
+                    grid, params, cfg, rank_artifact=ra,
+                    calibration=_calib(cfg))
+    assert res.rank_artifact.hessians is not None
+    assert ra.hessians is None                  # input not mutated
+    assert len(res.rows) == 2
+
+
+def test_one_point_sweep_token_identical_to_direct_run(model, tmp_path):
+    """Regression: sweeping a single point == running the pipeline
+    directly, down to generated tokens on dense AND sparse serve paths."""
+    cfg, params = model
+    calib = _calib(cfg)
+    recipe = base_recipe(cfg)
+    direct = MosaicPipeline(recipe).run(params, cfg, calibration=calib)
+    res = run_sweep(recipe, GridSpec(), params, cfg,
+                    out_dir=str(tmp_path / "one"), calibration=calib)
+    assert len(res.rows) == 1
+    loaded = PrunedArtifact.load(res.rows[0]["artifact_dir"])
+    for (p1, l1), (p2, l2) in zip(iter_paths(direct.params),
+                                  iter_paths(loaded.params)):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                                cfg.vocab)
+
+    def gen(params_, cfg_, packed):
+        eng = Engine(params_, cfg_, max_seq=16, compute_dtype=jnp.float32,
+                     cache_dtype=jnp.float32, packed=packed)
+        return np.asarray(eng.generate(prompt, 6))
+
+    np.testing.assert_array_equal(gen(direct.params, direct.cfg, None),
+                                  gen(loaded.params, loaded.cfg, None))
+    np.testing.assert_array_equal(
+        gen(direct.params, direct.cfg, direct.packed),
+        gen(loaded.params, loaded.cfg, loaded.packed))
+
+
+# ---------------------------------------------------------- pareto logic
+
+def test_annotate_pareto_front():
+    rows = [
+        {"ppl": 10.0, "acc": 50.0, "bytes_after": 1000},   # dominated
+        {"ppl": 8.0, "acc": 55.0, "bytes_after": 900},     # dominates ^
+        {"ppl": 20.0, "acc": 40.0, "bytes_after": 500},    # smallest
+        {"ppl": 7.0, "acc": 60.0, "bytes_after": 2000},    # best quality
+    ]
+    annotate_pareto(rows)
+    assert [r["pareto"] for r in rows] == [False, True, True, True]
+    assert rows[0]["quality_per_byte"] == pytest.approx(
+        50.0 / (1000 / 2 ** 20))
+    text = pareto_csv(rows[:1])
+    assert text.splitlines()[0].startswith("label,arch,p,")
+
+
+def test_annotate_pareto_handles_missing_quality():
+    rows = [{"ppl": None, "acc": None, "bytes_after": 100},
+            {"ppl": 5.0, "acc": 10.0, "bytes_after": 100}]
+    annotate_pareto(rows)
+    assert rows[0]["pareto"] is False and rows[0]["quality_per_byte"] is None
+    assert rows[1]["pareto"] is True
