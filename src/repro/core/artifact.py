@@ -16,7 +16,9 @@ Layout on disk::
       config.json               # post-pruning ModelConfig
       recipe.json               # the PruneRecipe that produced this
       targets.json              # [[layer, name, target], ...]
-      plans.npz + plans.json    # PackedProjection block plans
+      plans.npz + plans.json    # block plans: PackedProjection entries
+                                # plus leading-E PackedExpertProjection
+                                # stacks for MoE expert weights
       report.json               # provenance, timings, pack coverage
 """
 from __future__ import annotations

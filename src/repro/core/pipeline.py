@@ -98,7 +98,10 @@ def stage_prune(ctx: PipelineContext) -> None:
 
 @register_stage("pack")
 def stage_pack(ctx: PipelineContext) -> None:
-    """Post-Pruning Optimizer: block plans for the serving kernel."""
+    """Post-Pruning Optimizer: block plans for the serving kernel —
+    per-projection plans for dense weights, per-expert plan stacks for
+    MoE expert weights (the report's ``skipped`` list only ever carries
+    ``reason: "non-tileable"`` now; experts are planned, not skipped)."""
     from repro.serve.sparse import pack_model_with_report
     ctx.packed, ctx.pack_report = pack_model_with_report(
         ctx.params, ctx.cfg, block=ctx.recipe.block)

@@ -22,6 +22,10 @@ Output layout (``out_dir``)::
     points/<label>/   # one PrunedArtifact bundle per grid point
     pareto.csv        # one row per point: quality + size + time
     pareto.md         # the same table, human-readable
+
+Re-running a sweep over the same ``out_dir`` resumes: points whose
+bundle already exists are skipped (their Pareto row is rebuilt from the
+saved ``report.json``) — pass ``resume=False`` / ``--fresh`` to force.
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ import os
 import time
 from typing import Callable, Iterable, Optional, Union
 
+from repro.core.artifact import RECIPE_FILE, REPORT_FILE, PrunedArtifact
 from repro.core.evaluate import default_eval_batches
 from repro.core.pipeline import MosaicPipeline
 from repro.core.rank_controller import (RankArtifact, ensure_hessians,
@@ -43,7 +48,8 @@ GRID_AXES = ("p", "category", "selector", "granularity")
 
 CSV_COLUMNS = ("label", "arch", "p", "category", "selector", "granularity",
                "ppl", "acc", "bytes_after", "params_after", "prune_seconds",
-               "point_seconds", "flop_savings", "quality_per_byte", "pareto")
+               "point_seconds", "flop_savings", "expert_plans",
+               "quality_per_byte", "pareto")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,11 +119,36 @@ def point_label(recipe: PruneRecipe) -> str:
 @dataclasses.dataclass
 class SweepResult:
     rows: list                       # one report dict per grid point
-    rank_artifact: RankArtifact      # the single reused profile
+    rank_artifact: Optional[RankArtifact]  # the single reused profile
+    # (None when every point resumed and no profile was supplied)
     profiled: bool                   # False when the profile was supplied
     out_dir: Optional[str] = None
     csv_path: Optional[str] = None
     md_path: Optional[str] = None
+
+
+def _resume_report(artifact_dir: Optional[str],
+                   point: PruneRecipe) -> Optional[dict]:
+    """The saved report of a resumable grid point, or None when the
+    point must (re-)execute. The label only encodes p / category /
+    selector / granularity, so the bundle's own ``recipe.json`` must
+    equal the current point recipe — editing any other base-recipe
+    field (block, spread, calibration, ...) invalidates the bundle
+    instead of silently serving stale results."""
+    if not artifact_dir or not PrunedArtifact.is_artifact(artifact_dir):
+        return None
+    report_path = os.path.join(artifact_dir, REPORT_FILE)
+    if not os.path.exists(report_path):
+        return None
+    try:
+        with open(os.path.join(artifact_dir, RECIPE_FILE)) as f:
+            saved = PruneRecipe.from_dict(json.load(f))
+        if saved != point:
+            return None
+        with open(report_path) as f:
+            return json.load(f)
+    except (OSError, ValueError, TypeError, KeyError):
+        return None       # unreadable/truncated/foreign bundle: re-run
 
 
 def _point_stages(stages: Iterable) -> tuple:
@@ -137,6 +168,7 @@ def run_sweep(base: PruneRecipe,
               calibration: Optional[list] = None,
               rank_artifact: Optional[RankArtifact] = None,
               eval_batches: Optional[dict] = None,
+              resume: bool = True,
               progress: Optional[Callable] = None) -> SweepResult:
     """Profile once, prune many, evaluate every point, rank by Pareto.
 
@@ -146,6 +178,12 @@ def run_sweep(base: PruneRecipe,
     ``profile_model`` runs exactly once for the whole sweep, with
     Hessians only when some point's selector needs them — and a supplied
     Hessian-free profile gains them lazily via :func:`ensure_hessians`.
+
+    ``resume`` (default on): grid points whose ``points/<label>/``
+    bundle already exists under ``out_dir`` are not re-pruned — their
+    Pareto row is rebuilt from the saved ``report.json``, so an
+    interrupted sweep re-run pays only for the missing points. Pass
+    ``resume=False`` to force every point to re-execute.
     """
     say = progress or (lambda *_: None)
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
@@ -164,24 +202,36 @@ def run_sweep(base: PruneRecipe,
                                           c.seq_len)
 
     profiled = False
-    if rank_artifact is None:
-        say(f"profiling once for {len(points)} points "
-            f"(hessians={want_hessians})")
-        rank_artifact = profile_model(params, cfg, _calibration(),
-                                      want_hessians=want_hessians)
-        profiled = True
-    elif want_hessians and rank_artifact.hessians is None:
-        say("attaching hessians to the supplied profile (lazy)")
-        rank_artifact = ensure_hessians(rank_artifact, params, cfg,
-                                        _calibration())
-    if out_dir:
-        rank_artifact.save(os.path.join(out_dir, "profile"))
+
+    profile_ready = False
+
+    def ensure_profile() -> RankArtifact:
+        """Profile (or attach Hessians) on first *executed* point only —
+        a fully-resumed sweep re-run never pays the calibration cost."""
+        nonlocal rank_artifact, profiled, profile_ready
+        if profile_ready:
+            return rank_artifact
+        if rank_artifact is None:
+            say(f"profiling once for {len(points)} points "
+                f"(hessians={want_hessians})")
+            rank_artifact = profile_model(params, cfg, _calibration(),
+                                          want_hessians=want_hessians)
+            profiled = True
+        elif want_hessians and rank_artifact.hessians is None:
+            say("attaching hessians to the supplied profile (lazy)")
+            rank_artifact = ensure_hessians(rank_artifact, params, cfg,
+                                            _calibration())
+        if out_dir:
+            rank_artifact.save(os.path.join(out_dir, "profile"))
+        profile_ready = True
+        return rank_artifact
 
     if eval_batches is None:
         eval_batches = default_eval_batches(cfg, base)
 
     rows = []
     labels: dict = {}
+    n_resumed = 0
     for recipe in points:
         point = recipe.replace(stages=_point_stages(recipe.stages))
         label = point_label(point)
@@ -190,16 +240,22 @@ def run_sweep(base: PruneRecipe,
             label = f"{label}-{labels[label]}"
         else:
             labels[label] = 0
-        t0 = time.perf_counter()
-        artifact = MosaicPipeline(point).run(
-            params, cfg, rank_artifact=rank_artifact,
-            eval_batches=eval_batches)
-        point_seconds = time.perf_counter() - t0
-        artifact_dir = None
-        if out_dir:
-            artifact_dir = os.path.join(out_dir, "points", label)
-            artifact.save(artifact_dir)
-        rep = artifact.report
+        artifact_dir = (os.path.join(out_dir, "points", label)
+                        if out_dir else None)
+        rep = _resume_report(artifact_dir, point) if resume else None
+        if rep is not None:
+            point_seconds = 0.0
+            n_resumed += 1
+        else:
+            t0 = time.perf_counter()
+            artifact = MosaicPipeline(point).run(
+                params, cfg, rank_artifact=ensure_profile(),
+                eval_batches=eval_batches)
+            point_seconds = time.perf_counter() - t0
+            if artifact_dir:
+                artifact.save(artifact_dir)
+            rep = artifact.report
+        pack = rep.get("pack") or {}
         rows.append({
             "label": label,
             "arch": point.arch,
@@ -213,13 +269,17 @@ def run_sweep(base: PruneRecipe,
             "params_after": rep.get("params_after"),
             "prune_seconds": rep.get("prune_seconds"),
             "point_seconds": point_seconds,
-            "flop_savings": (rep.get("pack") or {}).get("flop_savings"),
+            "flop_savings": pack.get("flop_savings"),
+            "expert_plans": pack.get("n_expert_packed"),
             "artifact_dir": artifact_dir,
         })
         if progress:
             r = rows[-1]
             progress(f"{label}: ppl={_fmt(r, 'ppl')} acc={_fmt(r, 'acc')} "
                      f"bytes={r['bytes_after']} in {point_seconds:.1f}s")
+    if n_resumed:
+        say(f"resume: skipped {n_resumed}/{len(points)} grid points with "
+            f"existing bundles under {os.path.join(out_dir, 'points')}")
 
     annotate_pareto(rows)
     rows.sort(key=lambda r: -(r["quality_per_byte"] or 0.0))

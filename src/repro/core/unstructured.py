@@ -124,7 +124,15 @@ def _sel_wanda(w, proj, target, ctx):
 def _sel_wanda_block(w, proj, target, ctx):
     scores = score_projection(w, proj, "wanda", ctx.anorms)
     # mask tile == pack tile, so every pruned tile is a skipped tile
-    mask = block_mask_from_metric(scores, target, block=ctx.block)
+    if proj.expert_axis is not None:
+        # per-expert tiles: the pack stage plans each expert's 2-D fold
+        # independently, so the mask must tile each expert independently
+        # too (a fold across the leading E axis would misalign)
+        mask = jnp.stack([
+            block_mask_from_metric(scores[e], target, block=ctx.block)
+            for e in range(scores.shape[0])])
+    else:
+        mask = block_mask_from_metric(scores, target, block=ctx.block)
     return jnp.where(mask, w, jnp.zeros_like(w)), mask
 
 

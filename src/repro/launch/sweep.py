@@ -75,6 +75,10 @@ def main() -> None:
     ap.add_argument("--calib-samples", type=int, default=32)
     ap.add_argument("--out", default="results/sweep",
                     help="sweep output directory (artifacts + Pareto)")
+    ap.add_argument("--fresh", action="store_true",
+                    help="re-execute every grid point even when its "
+                         "points/<label>/ bundle already exists (default: "
+                         "resume — existing bundles are skipped)")
     args = ap.parse_args()
 
     if args.recipe:
@@ -99,7 +103,8 @@ def main() -> None:
 
     print(f"sweep: {grid.n_points()} points over {cfg.name}")
     res = run_sweep(base, grid, params, cfg, out_dir=args.out,
-                    rank_artifact=rank_artifact, progress=print)
+                    rank_artifact=rank_artifact, resume=not args.fresh,
+                    progress=print)
 
     if res.profiled:
         print(f"profile: computed once "

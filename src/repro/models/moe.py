@@ -50,12 +50,22 @@ def n_groups(B: int, S: int) -> int:
     return B
 
 
-def apply_moe(params: dict, spec: MoESpec, x: jax.Array):
+def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
+              expert_linear=None):
     """x: (B, S, d). Returns (y, aux_loss).
 
     Grouped capacity dispatch (GShard/T5X style): tokens are routed within
     their group only; scatter/gather carry a leading group batch-dim, so
     XLA partitions them along 'data' instead of emitting global gathers.
+
+    ``expert_linear``: optional ``(name, e, x2, w) -> y2`` override for
+    the per-expert matmuls (``x2``: the expert's flattened dispatch slots,
+    ``w``: that expert's 2-D weight) — the serving block-sparse fast path
+    runs each expert's slot batch through that expert's tile plan here.
+    All E experts compute over their capacity slots either way (exactly
+    like the stacked einsum); the override saves zero tiles, not expert
+    selection. The default path is the stacked einsum (and the only path
+    that feeds the calibration taps, which profile the dense model).
     """
     dtype = x.dtype
     B, S, d = x.shape
@@ -91,16 +101,35 @@ def apply_moe(params: dict, spec: MoESpec, x: jax.Array):
     slots = hint(slots, "batch", "experts", None, None)
 
     # Expert FFN on (G, E, C, d)
-    tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
-    up = jnp.einsum("gecd,edf->gecf", slots, params["up"].astype(dtype))
-    if spec.gated:
-        g = activation(spec.act, jnp.einsum(
-            "gecd,edf->gecf", slots, params["gate"].astype(dtype)))
-        h = g * up
+    if expert_linear is None:
+        tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
+        up = jnp.einsum("gecd,edf->gecf", slots, params["up"].astype(dtype))
+        if spec.gated:
+            g = activation(spec.act, jnp.einsum(
+                "gecd,edf->gecf", slots, params["gate"].astype(dtype)))
+            h = g * up
+        else:
+            h = activation(spec.act, up)
+        tap("moe_down", h, channel_axes=(1, 3), expert_first=True)
+        out_slots = jnp.einsum("gecf,efd->gecd", h,
+                               params["down"].astype(dtype))
     else:
-        h = activation(spec.act, up)
-    tap("moe_down", h, channel_axes=(1, 3), expert_first=True)
-    out_slots = jnp.einsum("gecf,efd->gecd", h, params["down"].astype(dtype))
+        # per-expert matmul override (block-sparse serving): each expert's
+        # C-slot batch runs through its own kernel plan
+        outs = []
+        for e in range(E):
+            xe = slots[:, e].reshape(G * C, d)
+            up = expert_linear("up", e, xe, params["up"][e].astype(dtype))
+            if spec.gated:
+                g = activation(spec.act, expert_linear(
+                    "gate", e, xe, params["gate"][e].astype(dtype)))
+                h = g * up
+            else:
+                h = activation(spec.act, up)
+            out = expert_linear("down", e, h,
+                                params["down"][e].astype(dtype))
+            outs.append(out.reshape(G, C, d))
+        out_slots = jnp.stack(outs, axis=1)
     out_slots = hint(out_slots, "batch", "experts", None, None)
 
     # Combine: per-group gather; dropped assignments contribute 0.

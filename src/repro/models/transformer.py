@@ -139,10 +139,12 @@ def apply_block(block_params: dict, cfg: ModelConfig, spec: LayerSpec,
     aux = jnp.zeros((), jnp.float32)
     if spec.ffn is not None:
         h = L.apply_norm(block_params["norm2"], cfg.norm, x)
-        if isinstance(spec.ffn, MoESpec):
-            y, aux = MOE.apply_moe(block_params["moe"], spec.ffn, h)
-        elif mlp_apply is not None:
+        if mlp_apply is not None:
+            # serving fast path: the hook sees every FFN (MLP and MoE)
+            # spec and dispatches dense-vs-sparse per projection
             y = mlp_apply(block_params, spec.ffn, h, layer)
+        elif isinstance(spec.ffn, MoESpec):
+            y, aux = MOE.apply_moe(block_params["moe"], spec.ffn, h)
         else:
             y = L.apply_mlp(block_params["mlp"], spec.ffn, h)
         x = x + y
@@ -160,9 +162,12 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
     replace the first F token embeddings (VLM patches / audio frames).
     cache + cache_index: decode mode (tokens are the new step(s));
     cache_index is a scalar or a per-sequence (B,) vector (slot pool).
-    mlp_apply: optional ``(block_params, mlp_spec, x, layer) -> y``
-    override for dense-MLP layers — the serving block-sparse fast path.
-    Unrolled configs only (the layer index must be static).
+    mlp_apply: optional ``(block_params, ffn_spec, x, layer) -> y``
+    override for FFN layers (``ffn_spec`` is an ``MLPSpec`` or
+    ``MoESpec``) — the serving block-sparse fast path; MoE layers run
+    each expert's capacity-slot batch through its per-expert plan and
+    drop the aux loss (inference-only). Unrolled configs only (the
+    layer index must be static).
     """
     B, S = tokens.shape
     if mlp_apply is not None and cfg.scan_layers:

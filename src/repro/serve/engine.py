@@ -20,12 +20,14 @@ from repro.models.specs import ModelConfig
 
 
 def make_sparse_mlp_apply(packed: dict, interpret: bool = True):
-    """`mlp_apply` hook routing dense-MLP layers through the block-sparse
-    kernel wherever ``packed`` (from ``sparse.pack_model``) has a plan."""
-    from repro.serve.sparse import sparse_apply_mlp
+    """`mlp_apply` hook routing FFN layers through the block-sparse
+    kernel wherever ``packed`` (from ``sparse.pack_model``) has a plan —
+    dense MLPs per projection, MoE layers per expert via their
+    per-expert plan stacks."""
+    from repro.serve.sparse import sparse_apply_ffn
 
     def mlp_apply(block_params, spec, x, layer):
-        return sparse_apply_mlp(block_params, spec, x, packed, layer,
+        return sparse_apply_ffn(block_params, spec, x, packed, layer,
                                 interpret=interpret)
     return mlp_apply
 

@@ -2,8 +2,11 @@
 composite) model's projections through the Pallas block-sparse kernel.
 
 ``pack_model`` walks the pruned projections once (the PC's Post-Pruning
-Optimizer step, Fig. 6 #10), builds the per-projection block plans, and
-``sparse_apply_mlp`` executes the feed-forward with zero tiles skipped.
+Optimizer step, Fig. 6 #10), builds the per-projection block plans —
+including a per-expert plan stack for every MoE expert weight — and
+``sparse_apply_ffn`` executes the feed-forward with zero tiles skipped
+(``sparse_apply_mlp`` for dense-MLP layers, ``sparse_apply_moe`` routing
+each selected expert through its own plan inside the MoE dispatch).
 On TPU the skipped tiles are real MXU/HBM savings; on CPU the kernel
 runs in interpret mode (tests assert exact agreement with dense).
 """
@@ -32,6 +35,30 @@ class PackedProjection:
     density: float             # fraction of nonzero tiles
 
 
+@dataclasses.dataclass
+class PackedExpertProjection:
+    """A leading-``E`` stack of per-expert block plans for one MoE
+    projection. Experts share ``max_nnz`` (each expert's index row is
+    edge-padded, matching ``plan_blocks`` padding semantics — the kernel
+    masks on ``counts``), so one stacked plan covers the whole expert
+    group even when per-expert densities diverge."""
+    counts: jax.Array          # (E, N/bn)
+    indices: jax.Array         # (E, N/bn, max_nnz)
+    block: int
+    density: float             # mean nonzero-tile fraction over experts
+    densities: tuple           # per-expert nonzero-tile fractions
+
+    @property
+    def n_experts(self) -> int:
+        return int(self.counts.shape[0])
+
+    def expert(self, e: int) -> PackedProjection:
+        """The expert-``e`` view the block-sparse kernel consumes."""
+        return PackedProjection(counts=self.counts[e],
+                                indices=self.indices[e], block=self.block,
+                                density=float(self.densities[e]))
+
+
 def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
     """Build the kernel's block plan from a pruned weight. Returns None
     when the (2-D-folded) weight doesn't tile evenly."""
@@ -43,6 +70,33 @@ def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
     counts, indices = plan_blocks(bm)
     return PackedProjection(counts=counts, indices=indices, block=block,
                             density=float(bm.mean()))
+
+
+def pack_expert_projection(w, block: int = 128
+                           ) -> Optional[PackedExpertProjection]:
+    """Per-expert block plans for an ``(E, K, ...)`` MoE weight. Each
+    expert's 2-D fold is planned independently; index rows are padded to
+    the max ``max_nnz`` across experts so the stack is rectangular."""
+    wh = np.asarray(w)
+    E = wh.shape[0]
+    w2 = wh.reshape(E, wh.shape[1], -1)
+    K, N = w2.shape[1], w2.shape[2]
+    if K % block or N % block:
+        return None
+    counts_e, indices_e, densities = [], [], []
+    for e in range(E):
+        bm = block_mask_from_weight_mask(w2[e] != 0, block, block)
+        counts, indices = plan_blocks(bm)
+        counts_e.append(np.asarray(counts))
+        indices_e.append(np.asarray(indices))
+        densities.append(float(bm.mean()))
+    max_nnz = max(idx.shape[1] for idx in indices_e)
+    indices_e = [np.pad(idx, ((0, 0), (0, max_nnz - idx.shape[1])),
+                        mode="edge") for idx in indices_e]
+    return PackedExpertProjection(
+        counts=jnp.asarray(np.stack(counts_e)),
+        indices=jnp.asarray(np.stack(indices_e)), block=block,
+        density=float(np.mean(densities)), densities=tuple(densities))
 
 
 def pack_model_with_report(params, cfg: ModelConfig,
@@ -59,20 +113,21 @@ def pack_model_with_report(params, cfg: ModelConfig,
         w = tree_get(params, proj.path)
         n = int(np.prod(w.shape))
         if proj.expert_axis is not None:
-            # expert weights need per-expert plans (future work)
-            skipped.append({"layer": proj.layer, "name": proj.name,
-                            "params": n, "reason": "expert"})
-            continue
-        p = pack_projection(w, block)
+            p = pack_expert_projection(w, block)
+        else:
+            p = pack_projection(w, block)
         if p is None:
             skipped.append({"layer": proj.layer, "name": proj.name,
                             "params": n, "reason": "non-tileable"})
         else:
             packed[proj.key] = p
             packed_params += n
+    n_expert = sum(isinstance(p, PackedExpertProjection)
+                   for p in packed.values())
     report = {
         "block": block,
         "n_packed": len(packed),
+        "n_expert_packed": n_expert,
         "packed_params": packed_params,
         "n_skipped": len(skipped),
         "skipped_params": sum(s["params"] for s in skipped),
@@ -89,8 +144,9 @@ def pack_model_with_report(params, cfg: ModelConfig,
 
 
 def pack_model(params, cfg: ModelConfig, block: int = 128) -> dict:
-    """{(layer, name): PackedProjection} for every tileable projection.
-    Skipped (non-tileable / expert) projections are logged; use
+    """{(layer, name): PackedProjection | PackedExpertProjection} for
+    every tileable projection (MoE expert weights get per-expert plan
+    stacks). Skipped (non-tileable) projections are logged; use
     :func:`pack_model_with_report` to get the summary programmatically."""
     packed, _ = pack_model_with_report(params, cfg, block)
     return packed
@@ -136,6 +192,46 @@ def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
     return lin("down", h)
 
 
+def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
+                     layer: int, interpret: bool = True):
+    """MoE feed-forward with every expert's capacity-slot batch run
+    through the block-sparse kernel via that expert's plan. Routing,
+    dispatch, and combine are ``moe.apply_moe``'s own (shared code, no
+    drift); only the expert matmuls are overridden. Like the dense
+    einsum it replaces, the capacity dispatch computes all E experts
+    over their slot buffers — the saving is each expert's skipped zero
+    tiles, not expert selection."""
+    from repro.models.moe import apply_moe
+    has_plans = any(isinstance(packed_layer.get((layer, nm)),
+                               PackedExpertProjection)
+                    for nm in ("gate", "up", "down"))
+    if not has_plans:
+        y, _ = apply_moe(block_params["moe"], spec, x)
+        return y
+
+    def expert_linear(name, e, xe, we):
+        plan = packed_layer.get((layer, name))
+        if isinstance(plan, PackedExpertProjection):
+            return sparse_linear(xe, we, plan.expert(e), interpret)
+        return xe @ we
+
+    y, _ = apply_moe(block_params["moe"], spec, x,
+                     expert_linear=expert_linear)
+    return y
+
+
+def sparse_apply_ffn(block_params: dict, spec, x, packed: dict,
+                     layer: int, interpret: bool = True):
+    """Feed-forward dispatch for the serving ``mlp_apply`` hook: dense-MLP
+    layers go through :func:`sparse_apply_mlp`, MoE layers through
+    :func:`sparse_apply_moe` (per-expert plans inside the dispatch)."""
+    from repro.models.specs import MoESpec
+    if isinstance(spec, MoESpec):
+        return sparse_apply_moe(block_params, spec, x, packed, layer,
+                                interpret)
+    return sparse_apply_mlp(block_params, spec, x, packed, layer, interpret)
+
+
 def flop_savings(packed: dict) -> float:
     """Mean fraction of projection FLOPs the kernel skips."""
     if not packed:
@@ -149,7 +245,9 @@ def flop_savings(packed: dict) -> float:
 # serve hot path).
 
 def plans_to_host(packed: dict) -> tuple:
-    """``(arrays, meta)``: flat npz-able arrays + JSON-able metadata."""
+    """``(arrays, meta)``: flat npz-able arrays + JSON-able metadata.
+    Expert plan stacks carry ``"expert": true`` plus their per-expert
+    densities so :func:`plans_from_host` rebuilds the exact class."""
     arrays: dict = {}
     meta: dict = {}
     for (layer, name), p in packed.items():
@@ -157,17 +255,27 @@ def plans_to_host(packed: dict) -> tuple:
         arrays[key + ":counts"] = np.asarray(jax.device_get(p.counts))
         arrays[key + ":indices"] = np.asarray(jax.device_get(p.indices))
         meta[key] = {"block": p.block, "density": p.density}
+        if isinstance(p, PackedExpertProjection):
+            meta[key]["expert"] = True
+            meta[key]["densities"] = list(p.densities)
     return arrays, meta
 
 
 def plans_from_host(arrays: dict, meta: dict) -> dict:
-    """Inverse of :func:`plans_to_host`: rebuild the PackedProjection
-    plans the engines consume."""
+    """Inverse of :func:`plans_to_host`: rebuild the PackedProjection /
+    PackedExpertProjection plans the engines consume."""
     packed: dict = {}
     for key, m in meta.items():
         layer, name = key.split(":")
-        packed[(int(layer), name)] = PackedProjection(
-            counts=jnp.asarray(arrays[key + ":counts"]),
-            indices=jnp.asarray(arrays[key + ":indices"]),
-            block=int(m["block"]), density=float(m["density"]))
+        counts = jnp.asarray(arrays[key + ":counts"])
+        indices = jnp.asarray(arrays[key + ":indices"])
+        if m.get("expert"):
+            packed[(int(layer), name)] = PackedExpertProjection(
+                counts=counts, indices=indices, block=int(m["block"]),
+                density=float(m["density"]),
+                densities=tuple(float(d) for d in m["densities"]))
+        else:
+            packed[(int(layer), name)] = PackedProjection(
+                counts=counts, indices=indices,
+                block=int(m["block"]), density=float(m["density"]))
     return packed

@@ -1,0 +1,88 @@
+"""docs/ ↔ code sync: the recipe schema reference must name every
+dataclass field and every registered plug-in, so the doc cannot rot as
+fields/selectors/categories/stages are added; README + docs internal
+links must resolve."""
+import dataclasses
+import os
+import re
+
+import pytest
+
+from repro.core import pipeline  # noqa: F401 (registers stages)
+from repro.core.recipe import GRANULARITIES, CalibrationSpec, PruneRecipe
+from repro.core.registry import CATEGORIES, SELECTORS, STAGES
+from repro.core.sweep import GridSpec
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCHEMA_DOC = os.path.join(REPO, "docs", "recipe-schema.md")
+
+
+@pytest.fixture(scope="module")
+def schema_text():
+    assert os.path.exists(SCHEMA_DOC), "docs/recipe-schema.md is missing"
+    with open(SCHEMA_DOC) as f:
+        return f.read()
+
+
+def _codes(text):
+    """All `inline code` spans — fields/names must appear as code."""
+    return set(re.findall(r"`([^`]+)`", text))
+
+
+@pytest.mark.parametrize("cls", [PruneRecipe, CalibrationSpec, GridSpec])
+def test_every_dataclass_field_documented(schema_text, cls):
+    codes = _codes(schema_text)
+    missing = [f.name for f in dataclasses.fields(cls)
+               if f.name not in codes]
+    assert not missing, (f"{cls.__name__} fields missing from "
+                         f"docs/recipe-schema.md: {missing}")
+
+
+def test_every_registry_name_documented(schema_text):
+    for registry in (SELECTORS, CATEGORIES, STAGES):
+        for name in registry.names():
+            assert f'"{name}"' in schema_text or f"`{name}`" in schema_text, \
+                f"{registry.kind} {name!r} missing from docs/recipe-schema.md"
+    for name in GRANULARITIES:
+        assert f'"{name}"' in schema_text or f"`{name}`" in schema_text, \
+            f"granularity {name!r} missing from docs/recipe-schema.md"
+
+
+def test_doc_names_no_stale_registry_entries(schema_text):
+    """The registry-names section lists only names that still exist."""
+    section = schema_text.split("## Registry names", 1)[1]
+    documented = {n for n in _codes(section)
+                  if re.fullmatch(r"[a-z_]+", n)}
+    known = (set(SELECTORS.names()) | set(CATEGORIES.names())
+             | set(STAGES.names()) | set(GRANULARITIES)
+             | {"cloud", "edge", "mobile"})      # PLATFORMS presets
+    stale = {s for s in documented - known if "." not in s}
+    assert not stale, f"stale names documented: {sorted(stale)}"
+
+
+# ------------------------------------------------------------ doc links
+
+def _md_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            files.append(os.path.join(docs, name))
+    return files
+
+
+def test_markdown_relative_links_resolve():
+    """Every relative link in README + docs/ points at a real file
+    (external http(s) links and badge endpoints are skipped)."""
+    broken = []
+    for path in _md_files():
+        with open(path) as f:
+            text = f.read()
+        for target in re.findall(r"\[[^\]]*\]\(([^)#]+)(?:#[^)]*)?\)", text):
+            if target.startswith(("http://", "https://", "../../")):
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target))
+            if not os.path.exists(resolved):
+                broken.append(f"{os.path.relpath(path, REPO)} -> {target}")
+    assert not broken, f"broken relative links: {broken}"

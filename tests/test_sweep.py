@@ -277,6 +277,76 @@ def test_one_point_sweep_token_identical_to_direct_run(model, tmp_path):
         gen(loaded.params, loaded.cfg, loaded.packed))
 
 
+def test_sweep_resume_skips_existing_points(model, tmp_path, monkeypatch):
+    """Re-running a sweep over the same out_dir re-executes nothing:
+    rows come back from the saved report.json bundles. --fresh /
+    resume=False forces re-execution."""
+    cfg, params = model
+    out = str(tmp_path / "sweep")
+    grid = GridSpec(p=(0.4, 0.6))
+    first = run_sweep(base_recipe(cfg), grid, params, cfg, out_dir=out,
+                      calibration=_calib(cfg))
+    ran = []
+    orig_run = MosaicPipeline.run
+
+    def counting_run(self, *a, **k):
+        ran.append(1)
+        return orig_run(self, *a, **k)
+
+    monkeypatch.setattr(MosaicPipeline, "run", counting_run)
+    # a fully-resumed re-run must not even profile
+    monkeypatch.setattr(sweep_mod, "profile_model",
+                        lambda *a, **k: pytest.fail("re-profiled!"))
+    msgs = []
+    second = run_sweep(base_recipe(cfg), grid, params, cfg, out_dir=out,
+                       calibration=_calib(cfg), progress=msgs.append)
+    assert not ran                             # every point was resumed
+    assert not second.profiled and second.rank_artifact is None
+    assert any("resume: skipped 2/2" in m for m in msgs)
+    by_label = {r["label"]: r for r in first.rows}
+    for row in second.rows:
+        ref = by_label[row["label"]]
+        assert row["ppl"] == pytest.approx(ref["ppl"])
+        assert row["bytes_after"] == ref["bytes_after"]
+        assert row["point_seconds"] == 0.0
+    # resume=False re-executes every point
+    third = run_sweep(base_recipe(cfg), grid, params, cfg, out_dir=out,
+                      rank_artifact=first.rank_artifact,
+                      calibration=_calib(cfg), resume=False)
+    assert len(ran) == 2
+    assert all(r["point_seconds"] > 0 for r in third.rows)
+
+
+def test_sweep_resume_invalidates_on_recipe_change(model, tmp_path):
+    """A bundle only resumes when its saved recipe.json equals the
+    current point recipe: the label doesn't encode fields like block,
+    so editing the base recipe must re-execute, not serve stale rows."""
+    cfg, params = model
+    out = str(tmp_path / "sweep")
+    grid = GridSpec(p=(0.5,))
+    first = run_sweep(base_recipe(cfg), grid, params, cfg, out_dir=out,
+                      calibration=_calib(cfg))
+    # same label (p/category/selector unchanged), different spread
+    changed = run_sweep(base_recipe(cfg, spread=0.1), grid, params, cfg,
+                        out_dir=out, rank_artifact=first.rank_artifact,
+                        calibration=_calib(cfg))
+    assert changed.rows[0]["point_seconds"] > 0      # re-executed
+    # unchanged recipe resumes as usual
+    again = run_sweep(base_recipe(cfg, spread=0.1), grid, params, cfg,
+                      out_dir=out, rank_artifact=first.rank_artifact,
+                      calibration=_calib(cfg))
+    assert again.rows[0]["point_seconds"] == 0.0
+    # a truncated report.json (killed mid-save) re-executes, not crashes
+    with open(os.path.join(again.rows[0]["artifact_dir"],
+                           "report.json"), "w") as f:
+        f.write('{"ppl": 1.2, "by')
+    healed = run_sweep(base_recipe(cfg, spread=0.1), grid, params, cfg,
+                       out_dir=out, rank_artifact=first.rank_artifact,
+                       calibration=_calib(cfg))
+    assert healed.rows[0]["point_seconds"] > 0
+    assert healed.rows[0]["ppl"] is not None
+
+
 # ---------------------------------------------------------- pareto logic
 
 def test_annotate_pareto_front():
