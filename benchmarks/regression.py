@@ -1,0 +1,81 @@
+"""Benchmark-regression guard: compare a ``run.py --json`` metrics file
+against the committed ``benchmarks/baseline.json``.
+
+    python benchmarks/regression.py BENCH_PR.json [baseline.json]
+
+The baseline names the metrics it gates, one of three ways per metric:
+
+- ``{"ref": v}``   — value must stay within ±``tolerance`` (relative,
+  default 20%) of ``v``: the regression band for ratios/fractions that
+  are stable across machines (tile-skip fractions, FLOP savings).
+- ``{"min": v}`` / ``{"max": v}`` — hard floor/ceiling, no band: the
+  acceptance criteria (grouped kernel >= 1.2x the per-expert loop, one
+  launch per projection, sparse==dense agreement).
+
+Wall-clock metrics (``*_seconds``, ``*_tokens_per_s``) ride along in
+BENCH_PR.json as the per-PR trajectory artifact but are NOT gated —
+shared CI runners vary far beyond any honest tolerance. A gated metric
+missing from the metrics file fails loudly (a silently dropped
+benchmark row is itself a regression).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "baseline.json")
+
+
+def check(metrics: dict, baseline: dict) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    tol = float(baseline.get("tolerance", 0.20))
+    rows = metrics.get("rows", {})
+    failures = []
+    for key, rule in baseline["metrics"].items():
+        row, _, metric = key.partition(".")
+        have = rows.get(row, {})
+        if metric not in have:
+            failures.append(f"{key}: missing from metrics file "
+                            f"(row keys: {sorted(have) or 'none'})")
+            continue
+        v = float(have[metric])
+        if "ref" in rule:
+            ref = float(rule["ref"])
+            lo, hi = ref * (1 - tol), ref * (1 + tol)
+            if not lo <= v <= hi:
+                failures.append(f"{key}: {v:.4g} outside ±{tol:.0%} of "
+                                f"baseline {ref:.4g} [{lo:.4g}, {hi:.4g}]")
+        if "min" in rule and v < float(rule["min"]):
+            failures.append(f"{key}: {v:.4g} below floor {rule['min']:.4g}")
+        if "max" in rule and v > float(rule["max"]):
+            failures.append(f"{key}: {v:.4g} above ceiling "
+                            f"{rule['max']:.4g}")
+    return failures
+
+
+def main(argv) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        metrics = json.load(f)
+    baseline_path = argv[1] if len(argv) > 1 else DEFAULT_BASELINE
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = check(metrics, baseline)
+    n = len(baseline["metrics"])
+    if failures:
+        print(f"benchmark regression: {len(failures)}/{n} gated metrics "
+              f"failed vs {os.path.basename(baseline_path)}")
+        for msg in failures:
+            print(f"  FAIL {msg}")
+        return 1
+    print(f"benchmark regression guard: {n} gated metrics within bounds "
+          f"vs {os.path.basename(baseline_path)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -106,7 +106,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=os.path.join(RESULTS, "dryrun"))
     ap.add_argument("--csv", default=os.path.join(RESULTS, "roofline.csv"))
-    args = ap.parse_args()
+    # tolerate the driver's flags (run.py calls this in-process, so
+    # sys.argv carries run.py's own --json/--full/... arguments)
+    args, _ = ap.parse_known_args()
     rows = []
     for path in sorted(glob.glob(os.path.join(args.dir, "*__single.json"))):
         rows.append(analyse(path))

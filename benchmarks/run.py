@@ -2,11 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV (one row per benchmark unit),
 followed by each benchmark's detailed table. ``--full`` widens sweeps.
+``--json`` additionally writes structured per-row metrics (tokens/s,
+prune_seconds, kernel launch counts, ...) — the file the CI
+benchmark-regression guard (``benchmarks/regression.py``) compares
+against the committed ``benchmarks/baseline.json``.
 """
 from __future__ import annotations
 
 import argparse
 import io
+import json
 import os
 import sys
 import time
@@ -33,15 +38,20 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--csv", default=None, metavar="PATH",
                     help="also write the summary CSV to this file")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write structured per-row metrics (the "
+                         "benchmark-regression guard's input)")
     args, _ = ap.parse_known_args()
     fast = not args.full
 
-    from benchmarks import (composite, finetune, kernel_bench, overheads,
-                            prune_pipeline, quality, quant_compare,
-                            serve_bench, sweep_bench)
+    from benchmarks import (composite, finetune, kernel_bench,
+                            moe_kernel_bench, overheads, prune_pipeline,
+                            quality, quant_compare, serve_bench,
+                            sweep_bench)
 
     sections = []
     rows = []
+    metrics = {}
 
     for name, fn in [
         ("table4_fig7_quality_e1_e2", lambda: quality.main(fast)),
@@ -50,6 +60,7 @@ def main() -> None:
         ("fig11_fig12_overheads_e5", lambda: overheads.main(fast)),
         ("table13_quant_compare", lambda: quant_compare.main(fast)),
         ("kernel_bench", lambda: kernel_bench.main(fast)),
+        ("moe_kernel_bench", lambda: moe_kernel_bench.main(fast)),
         ("serve_bench", lambda: serve_bench.main(fast)),
         ("prune_pipeline", lambda: prune_pipeline.main(fast)),
         ("recipe_sweep", lambda: sweep_bench.main(fast)),
@@ -57,6 +68,7 @@ def main() -> None:
         nm, us, result, text = _timed(name, fn)
         derived = _derive(name, result)
         rows.append((nm, us, derived))
+        metrics[nm] = _metrics(nm, result, us)
         sections.append((nm, text))
 
     if not args.skip_roofline:
@@ -80,6 +92,10 @@ def main() -> None:
     if args.csv:
         with open(args.csv, "w") as f:
             f.write("\n".join(csv_lines) + "\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": metrics}, f, indent=2, sort_keys=True)
+            f.write("\n")
     for nm, text in sections:
         print(f"\n===== {nm} =====")
         print(text.rstrip())
@@ -129,6 +145,11 @@ def _derive(name: str, result) -> str:
             return (f"block_skip={bs['skip_frac']:.2f}"
                     f";flash_MiB_avoided="
                     f"{at['score_matrix_mib_avoided']:.0f}")
+        if name == "moe_kernel_bench":
+            return (f"grouped_vs_loop={result['grouped_vs_loop']:.2f}x"
+                    f";launches_per_proj="
+                    f"{result['grouped_launches_per_proj']:.0f}vs"
+                    f"{result['loop_launches_per_proj']:.0f}")
         if name == "serve_bench":
             return (f"continuous_vs_static={result['speedup']:.2f}x"
                     f";sparse_agrees={result['sparse_agrees']}"
@@ -145,6 +166,42 @@ def _derive(name: str, result) -> str:
     except Exception as e:                            # noqa: BLE001
         return f"derive-error:{e!r}"
     return "-"
+
+
+def _metrics(name: str, result, us: float) -> dict:
+    """Flat per-row metric dict for the regression guard / trajectory
+    artifact. Wall-clock metrics (``*_seconds``, ``*_per_s``) are
+    recorded for the trajectory; the committed baseline gates the
+    machine-independent ones (ratios, launch counts, agreement flags)."""
+    m = {"us_per_call": us}
+    try:
+        if name == "moe_kernel_bench":
+            m.update({k: result[k] for k in (
+                "grouped_vs_loop", "grouped_launches_per_proj",
+                "loop_launches_per_proj", "grouped_tokens_per_s",
+                "loop_tokens_per_s", "dense_tokens_per_s", "n_experts",
+                "max_err_vs_dense", "prune_seconds")})
+        elif name == "kernel_bench":
+            bs, _ = result
+            m.update({"skip_frac": bs["skip_frac"],
+                      "allclose_err": bs["allclose_err"]})
+        elif name == "serve_bench":
+            m.update({"continuous_vs_static": result["speedup"],
+                      "sparse_agrees": float(result["sparse_agrees"]),
+                      "flops_skipped": result["flops_skipped"]})
+            for r in result["rows"]:
+                m[f"{r['engine']}_tokens_per_s"] = r["tokens_per_s"]
+        elif name == "prune_pipeline":
+            for r in result:
+                m[f"{r['arch']}_prune_seconds"] = r["seconds"]
+                m[f"{r['arch']}_flop_savings"] = r["flop_savings"]
+        elif name == "recipe_sweep":
+            m.update({"points": float(len(result)),
+                      "pareto_points":
+                          float(sum(1 for r in result if r["pareto"]))})
+    except Exception as e:                            # noqa: BLE001
+        m["metrics_error"] = repr(e)
+    return m
 
 
 if __name__ == "__main__":

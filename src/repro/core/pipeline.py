@@ -101,10 +101,15 @@ def stage_pack(ctx: PipelineContext) -> None:
     """Post-Pruning Optimizer: block plans for the serving kernel —
     per-projection plans for dense weights, per-expert plan stacks for
     MoE expert weights (the report's ``skipped`` list only ever carries
-    ``reason: "non-tileable"`` now; experts are planned, not skipped)."""
+    ``reason: "non-tileable"`` now; experts are planned, not skipped).
+    ``recipe.group_experts`` marks the expert stacks for the grouped
+    one-launch kernel (the default serving path) vs the per-expert
+    launch loop; the flag rides inside each plan through the artifact
+    bundle, so rehydrated engines pick the same path with no repacking."""
     from repro.serve.sparse import pack_model_with_report
     ctx.packed, ctx.pack_report = pack_model_with_report(
-        ctx.params, ctx.cfg, block=ctx.recipe.block)
+        ctx.params, ctx.cfg, block=ctx.recipe.block,
+        group_experts=ctx.recipe.group_experts)
 
 
 @register_stage("report")

@@ -38,7 +38,9 @@ class PruneRecipe:
     ``category=None`` defers to platform-based selection (PC step 9);
     ``platform`` names a preset in ``prune_controller.PLATFORMS``.
     ``block`` is the block-sparse kernel tile the ``pack`` stage plans
-    for. ``stages`` is the ordered subset of the stage registry to run.
+    for; ``group_experts`` marks MoE expert plan stacks for the grouped
+    (one-launch-for-all-experts) kernel instead of the per-expert launch
+    loop. ``stages`` is the ordered subset of the stage registry to run.
     """
     arch: str
     p: float
@@ -53,6 +55,7 @@ class PruneRecipe:
     per_output: bool = True
     platform: Optional[str] = None
     block: int = 128
+    group_experts: bool = True
     calibration: CalibrationSpec = CalibrationSpec()
     stages: tuple = DEFAULT_STAGES
 

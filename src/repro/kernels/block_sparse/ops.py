@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import counters
 from repro.kernels.block_sparse.kernel import block_sparse_matmul
 
 
@@ -43,9 +44,16 @@ def sparse_density(block_mask) -> float:
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
                                              "interpret"))
-def blocksparse_matmul(x, w, counts, indices, block_m=128, block_k=128,
-                       block_n=128, interpret=False):
-    """Public op: y = x @ w visiting nonzero weight blocks only."""
+def _blocksparse_matmul_jit(x, w, counts, indices, block_m, block_k,
+                            block_n, interpret):
     return block_sparse_matmul(x, w, counts, indices, block_m=block_m,
                                block_k=block_k, block_n=block_n,
                                interpret=interpret)
+
+
+def blocksparse_matmul(x, w, counts, indices, block_m=128, block_k=128,
+                       block_n=128, interpret=False):
+    """Public op: y = x @ w visiting nonzero weight blocks only."""
+    counters.record("block_sparse")
+    return _blocksparse_matmul_jit(x, w, counts, indices, block_m, block_k,
+                                   block_n, interpret)

@@ -1,0 +1,27 @@
+"""Kernel launch counters (benchmark/CI instrumentation).
+
+Each public kernel op records a launch *at Python dispatch time*, before
+entering its jitted body — so eager callers (the benchmarks) count real
+dispatches, while a call traced inside an outer ``jax.jit`` counts once
+per trace (the launch structure baked into the compiled program). The
+MoE kernel benchmark uses this to show the grouped kernel issuing one
+launch per projection where the per-expert loop issues E.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+_LAUNCHES: Counter = Counter()
+
+
+def record(kernel: str, n: int = 1) -> None:
+    _LAUNCHES[kernel] += n
+
+
+def reset() -> None:
+    _LAUNCHES.clear()
+
+
+def snapshot() -> dict:
+    """{kernel name: launches since the last reset}."""
+    return dict(_LAUNCHES)

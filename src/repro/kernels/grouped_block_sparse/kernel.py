@@ -1,0 +1,93 @@
+"""Grouped block-sparse GEMM Pallas TPU kernel — all MoE experts' pruned
+projection matmuls in ONE launch (MegaBlocks-style).
+
+The per-expert serving path issues E separate ``block_sparse`` launches
+per projection, serializing dispatch and leaving the MXU idle between
+experts. Here the expert axis joins the grid instead: grid =
+(E, M-blocks, N-blocks, max_nnz), and each program scalar-prefetches its
+*own expert's* nonzero K-block indices from the stacked plan
+(``counts (E, N/bn)``, ``indices (E, N/bn, max_nnz)``). Tile skips
+compose across experts — a zero tile costs nothing no matter which
+expert owns it — and the whole expert group pays one dispatch
+round-trip. Experts share ``max_nnz`` (index rows are edge-padded by
+``pack_expert_projection``; padded steps are masked on ``counts``), so
+a denser expert never starves a sparser one of grid steps it needs.
+
+Unlike the dense-weight kernel, ``block_m`` here usually covers the
+*whole* per-expert slot batch (the ops wrapper's panel default): each
+expert's capacity-slot batch is small at decode time (C·G rows), so the
+x panel stays resident while the grid walks that expert's nonzero
+(K-block, N-block) tiles — each weight tile is then touched exactly
+once per launch instead of once per M-block, the MegaBlocks layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *,
+            max_nnz: int):
+    e = pl.program_id(0)
+    n = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(s < count_ref[e, n])
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_nnz - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_block_sparse_matmul(x: jax.Array, w: jax.Array,
+                                counts: jax.Array, indices: jax.Array, *,
+                                block_m: int = 128, block_k: int = 128,
+                                block_n: int = 128,
+                                interpret: bool = False) -> jax.Array:
+    """y[e] = x[e] @ w[e] for every expert e, one kernel launch total,
+    visiting only each expert's nonzero (K-block, N-block) weight tiles.
+
+    x: (E, M, K) — per-expert capacity-slot batches;
+    w: (E, K, N) — expert weight stack (zeros in pruned blocks);
+    counts: (E, N/bn) int32 — nonzero K-blocks per expert/block-column;
+    indices: (E, N/bn, max_nnz) int32 — their K-block ids (edge-padded to
+    the shared max_nnz so the stack is rectangular).
+    """
+    E, M, K = x.shape
+    E2, K2, N = w.shape
+    assert E == E2 and K == K2
+    assert M % block_m == 0 and K % block_k == 0 and N % block_n == 0
+    assert counts.shape == (E, N // block_n)
+    max_nnz = indices.shape[-1]
+
+    grid = (E, M // block_m, N // block_n, max_nnz)
+    kernel = functools.partial(_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_m, block_k),
+                             lambda e, m, n, s, cnt, idx: (e, m, idx[e, n, s])),
+                pl.BlockSpec((1, block_k, block_n),
+                             lambda e, m, n, s, cnt, idx: (e, idx[e, n, s], n)),
+            ],
+            out_specs=pl.BlockSpec((1, block_m, block_n),
+                                   lambda e, m, n, s, cnt, idx: (e, m, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        interpret=interpret,
+    )(counts, indices, x, w)

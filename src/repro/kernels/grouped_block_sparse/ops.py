@@ -1,0 +1,54 @@
+"""Jit-ready wrapper for the grouped (all-experts-in-one-launch)
+block-sparse GEMM, plus plan stacking from independent per-expert plans.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels import counters
+from repro.kernels.grouped_block_sparse.kernel import \
+    grouped_block_sparse_matmul
+
+
+def stack_expert_plans(counts_e, indices_e) -> tuple:
+    """Stack per-expert ``plan_blocks`` outputs into the rectangular
+    (counts (E, nN), indices (E, nN, max_nnz)) arrays the grouped kernel
+    consumes: index rows are edge-padded to the max ``max_nnz`` across
+    experts (padded steps are masked on ``counts``)."""
+    counts_e = [np.asarray(c) for c in counts_e]
+    indices_e = [np.asarray(i) for i in indices_e]
+    max_nnz = max(idx.shape[1] for idx in indices_e)
+    indices_e = [np.pad(idx, ((0, 0), (0, max_nnz - idx.shape[1])),
+                        mode="edge") for idx in indices_e]
+    return np.stack(counts_e), np.stack(indices_e)
+
+
+# Above this many slot rows the x panel stops fitting comfortably in
+# VMEM next to the weight tiles; fall back to tiling M by the plan block.
+PANEL_ROWS_MAX = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                             "interpret"))
+def _grouped_matmul_jit(x, w, counts, indices, block_m, block_k, block_n,
+                        interpret):
+    return grouped_block_sparse_matmul(x, w, counts, indices,
+                                       block_m=block_m, block_k=block_k,
+                                       block_n=block_n, interpret=interpret)
+
+
+def grouped_blocksparse_matmul(x, w, counts, indices, block_m=None,
+                               block_k=128, block_n=128, interpret=False):
+    """Public op: y[e] = x[e] @ w[e] for all experts in one launch,
+    visiting nonzero weight blocks only. ``block_m=None`` keeps each
+    expert's whole M panel resident (the decode-shaped default — every
+    weight tile is read exactly once per launch); pass an explicit
+    ``block_m`` to tile M for prefill-sized batches."""
+    if block_m is None:
+        block_m = x.shape[1]
+    counters.record("grouped_block_sparse")
+    return _grouped_matmul_jit(x, w, counts, indices, block_m, block_k,
+                               block_n, interpret)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the grouped block-sparse GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_block_sparse_matmul_ref(x: jax.Array, w: jax.Array,
+                                    block_masks: jax.Array, block_k: int,
+                                    block_n: int) -> jax.Array:
+    """y[e] = x[e] @ (w[e] with pruned blocks zeroed).
+
+    x: (E, M, K); w: (E, K, N); block_masks: (E, K/bk, N/bn).
+    """
+    mask = jnp.repeat(jnp.repeat(block_masks, block_k, axis=1),
+                      block_n, axis=2)
+    return jnp.einsum("emk,ekn->emn", x, jnp.where(mask, w,
+                                                   jnp.zeros_like(w)))

@@ -121,6 +121,9 @@ def main() -> None:
     ap.add_argument("--sparse", action="store_true",
                     help="serve pruned MLPs through the block-sparse kernel")
     ap.add_argument("--sparse-block", type=int, default=16)
+    ap.add_argument("--no-group-experts", action="store_true",
+                    help="fall back to one block-sparse launch per MoE "
+                         "expert instead of the grouped one-launch kernel")
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
@@ -133,10 +136,11 @@ def main() -> None:
               f"FLOPs skipped")
 
     max_seq = args.prompt_len + args.new_tokens
+    group = False if args.no_group_experts else None
     if args.engine == "static":
         eng = Engine(params, cfg, max_seq=max_seq,
                      compute_dtype=jnp.float32, cache_dtype=jnp.float32,
-                     packed=packed)
+                     packed=packed, group_experts=group)
         prompt = jnp.asarray(
             corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
         t0 = time.perf_counter()
@@ -160,7 +164,8 @@ def main() -> None:
                             max_new_tokens=args.new_tokens))
     eng = ContinuousEngine(params, cfg, max_slots=args.max_slots,
                            max_seq=max_seq, compute_dtype=jnp.float32,
-                           cache_dtype=jnp.float32, packed=packed)
+                           cache_dtype=jnp.float32, packed=packed,
+                           group_experts=group)
     finished, stats = eng.run(reqs, temperature=args.temperature)
     lat = latency_percentiles(finished)
     print(f"served {len(finished)} requests, {stats.generated_tokens} tokens "

@@ -51,7 +51,7 @@ def n_groups(B: int, S: int) -> int:
 
 
 def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
-              expert_linear=None):
+              expert_linear=None, expert_group_linear=None):
     """x: (B, S, d). Returns (y, aux_loss).
 
     Grouped capacity dispatch (GShard/T5X style): tokens are routed within
@@ -60,12 +60,22 @@ def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
 
     ``expert_linear``: optional ``(name, e, x2, w) -> y2`` override for
     the per-expert matmuls (``x2``: the expert's flattened dispatch slots,
-    ``w``: that expert's 2-D weight) — the serving block-sparse fast path
-    runs each expert's slot batch through that expert's tile plan here.
-    All E experts compute over their capacity slots either way (exactly
-    like the stacked einsum); the override saves zero tiles, not expert
-    selection. The default path is the stacked einsum (and the only path
-    that feeds the calibration taps, which profile the dense model).
+    ``w``: that expert's 2-D weight) — the serving block-sparse fallback
+    path runs each expert's slot batch through that expert's tile plan
+    here, one kernel launch per expert.
+
+    ``expert_group_linear``: optional ``(name, xs, ws) -> ys`` override
+    for the *stacked* expert matmuls (``xs``: (E, G·C, d) all experts'
+    flattened dispatch slots, ``ws``: the (E, d_in, d_out) weight stack)
+    — the grouped block-sparse kernel executes all E experts in ONE
+    launch here. Takes precedence over ``expert_linear`` when both are
+    given.
+
+    All E experts compute over their capacity slots on every path
+    (exactly like the stacked einsum); the overrides save zero tiles,
+    not expert selection. The default path is the stacked einsum (and
+    the only path that feeds the calibration taps, which profile the
+    dense model).
     """
     dtype = x.dtype
     B, S, d = x.shape
@@ -101,7 +111,20 @@ def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
     slots = hint(slots, "batch", "experts", None, None)
 
     # Expert FFN on (G, E, C, d)
-    if expert_linear is None:
+    if expert_group_linear is not None:
+        # stacked-expert matmul override (grouped block-sparse serving):
+        # all E experts' slot batches run through one kernel launch
+        xs = slots.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+        up = expert_group_linear("up", xs, params["up"].astype(dtype))
+        if spec.gated:
+            g = activation(spec.act, expert_group_linear(
+                "gate", xs, params["gate"].astype(dtype)))
+            h = g * up
+        else:
+            h = activation(spec.act, up)
+        out = expert_group_linear("down", h, params["down"].astype(dtype))
+        out_slots = out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+    elif expert_linear is None:
         tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
         up = jnp.einsum("gecd,edf->gecf", slots, params["up"].astype(dtype))
         if spec.gated:

@@ -48,7 +48,8 @@ class ContinuousEngine:
     def __init__(self, params, cfg: ModelConfig, max_slots: int,
                  max_seq: int, compute_dtype=jnp.bfloat16,
                  cache_dtype=jnp.bfloat16, packed: Optional[dict] = None,
-                 interpret: bool = True, prefill_multiple: int = 16):
+                 interpret: bool = True, prefill_multiple: int = 16,
+                 group_experts: Optional[bool] = None):
         if cfg.scan_layers:
             raise ValueError("continuous batching needs an unrolled config "
                              "(cfg.replace(scan_layers=False))")
@@ -65,7 +66,7 @@ class ContinuousEngine:
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
         self.prefill_multiple = prefill_multiple
-        mlp_apply = (make_sparse_mlp_apply(packed, interpret)
+        mlp_apply = (make_sparse_mlp_apply(packed, interpret, group_experts)
                      if packed else None)
         self._prefill = jax.jit(
             make_prefill_step(cfg, compute_dtype, mlp_apply))
@@ -85,7 +86,9 @@ class ContinuousEngine:
                       sparse: bool = True, **kw) -> "ContinuousEngine":
         """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`:
         the saved block plans are rehydrated into the jitted hot loop —
-        no ``pack_model`` at startup."""
+        no ``pack_model`` at startup. Expert plan stacks keep their
+        saved ``group`` flag, so MoE bundles serve through the grouped
+        one-launch kernel with zero repacking."""
         packed = artifact.packed if sparse else None
         return cls(artifact.params, artifact.cfg, max_slots=max_slots,
                    max_seq=max_seq, packed=packed or None, **kw)

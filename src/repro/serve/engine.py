@@ -19,16 +19,20 @@ from repro.models import transformer as T
 from repro.models.specs import ModelConfig
 
 
-def make_sparse_mlp_apply(packed: dict, interpret: bool = True):
+def make_sparse_mlp_apply(packed: dict, interpret: bool = True,
+                          group_experts: Optional[bool] = None):
     """`mlp_apply` hook routing FFN layers through the block-sparse
-    kernel wherever ``packed`` (from ``sparse.pack_model``) has a plan —
-    dense MLPs per projection, MoE layers per expert via their
-    per-expert plan stacks."""
+    kernels wherever ``packed`` (from ``sparse.pack_model``) has a plan —
+    dense MLPs per projection, MoE layers via their per-expert plan
+    stacks: one grouped launch for all experts by default
+    (``group_experts=None`` follows each plan's own ``group`` flag),
+    E per-expert launches with ``group_experts=False``."""
     from repro.serve.sparse import sparse_apply_ffn
 
     def mlp_apply(block_params, spec, x, layer):
         return sparse_apply_ffn(block_params, spec, x, packed, layer,
-                                interpret=interpret)
+                                interpret=interpret,
+                                group_experts=group_experts)
     return mlp_apply
 
 
@@ -75,12 +79,13 @@ class Engine:
 
     def __init__(self, params, cfg: ModelConfig, max_seq: int,
                  compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
-                 packed: Optional[dict] = None, interpret: bool = True):
+                 packed: Optional[dict] = None, interpret: bool = True,
+                 group_experts: Optional[bool] = None):
         self.params = params
         self.cfg = cfg
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
-        mlp_apply = (make_sparse_mlp_apply(packed, interpret)
+        mlp_apply = (make_sparse_mlp_apply(packed, interpret, group_experts)
                      if packed else None)
         self.prefill_step = jax.jit(
             make_prefill_step(cfg, compute_dtype, mlp_apply))
@@ -92,7 +97,10 @@ class Engine:
                       **kw) -> "Engine":
         """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`
         directly: params, pruned config, and (with ``sparse=True``) the
-        saved block plans — no ``pack_model`` at startup."""
+        saved block plans — no ``pack_model`` at startup. Rehydrated
+        expert plan stacks keep their saved ``group`` flag, so MoE
+        bundles packed for the grouped kernel serve through the
+        one-launch path with zero repacking."""
         packed = artifact.packed if sparse else None
         return cls(artifact.params, artifact.cfg, max_seq=max_seq,
                    packed=packed or None, **kw)

@@ -5,10 +5,13 @@ composite) model's projections through the Pallas block-sparse kernel.
 Optimizer step, Fig. 6 #10), builds the per-projection block plans —
 including a per-expert plan stack for every MoE expert weight — and
 ``sparse_apply_ffn`` executes the feed-forward with zero tiles skipped
-(``sparse_apply_mlp`` for dense-MLP layers, ``sparse_apply_moe`` routing
-each selected expert through its own plan inside the MoE dispatch).
-On TPU the skipped tiles are real MXU/HBM savings; on CPU the kernel
-runs in interpret mode (tests assert exact agreement with dense).
+(``sparse_apply_mlp`` for dense-MLP layers, ``sparse_apply_moe`` inside
+the MoE dispatch). MoE expert matmuls default to the *grouped*
+block-sparse kernel — all E experts in one launch, driven directly by
+the stacked plan — with the per-expert launch loop kept as the
+``group_experts=False`` fallback (and the reference in equivalence
+tests). On TPU the skipped tiles are real MXU/HBM savings; on CPU the
+kernels run in interpret mode (tests assert exact agreement with dense).
 """
 from __future__ import annotations
 
@@ -41,12 +44,18 @@ class PackedExpertProjection:
     projection. Experts share ``max_nnz`` (each expert's index row is
     edge-padded, matching ``plan_blocks`` padding semantics — the kernel
     masks on ``counts``), so one stacked plan covers the whole expert
-    group even when per-expert densities diverge."""
+    group even when per-expert densities diverge.
+
+    ``group`` selects the serving path: True (default) executes all E
+    experts' matmuls in ONE grouped kernel launch straight off this
+    stack; False falls back to E per-expert ``block_sparse`` launches
+    through the :meth:`expert` views."""
     counts: jax.Array          # (E, N/bn)
     indices: jax.Array         # (E, N/bn, max_nnz)
     block: int
     density: float             # mean nonzero-tile fraction over experts
     densities: tuple           # per-expert nonzero-tile fractions
+    group: bool = True         # serve via the grouped (one-launch) kernel
 
     @property
     def n_experts(self) -> int:
@@ -72,11 +81,12 @@ def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
                             density=float(bm.mean()))
 
 
-def pack_expert_projection(w, block: int = 128
+def pack_expert_projection(w, block: int = 128, group: bool = True
                            ) -> Optional[PackedExpertProjection]:
     """Per-expert block plans for an ``(E, K, ...)`` MoE weight. Each
     expert's 2-D fold is planned independently; index rows are padded to
-    the max ``max_nnz`` across experts so the stack is rectangular."""
+    the max ``max_nnz`` across experts so the stack is rectangular —
+    exactly the layout the grouped kernel's scalar prefetch consumes."""
     wh = np.asarray(w)
     E = wh.shape[0]
     w2 = wh.reshape(E, wh.shape[1], -1)
@@ -87,20 +97,19 @@ def pack_expert_projection(w, block: int = 128
     for e in range(E):
         bm = block_mask_from_weight_mask(w2[e] != 0, block, block)
         counts, indices = plan_blocks(bm)
-        counts_e.append(np.asarray(counts))
-        indices_e.append(np.asarray(indices))
+        counts_e.append(counts)
+        indices_e.append(indices)
         densities.append(float(bm.mean()))
-    max_nnz = max(idx.shape[1] for idx in indices_e)
-    indices_e = [np.pad(idx, ((0, 0), (0, max_nnz - idx.shape[1])),
-                        mode="edge") for idx in indices_e]
+    from repro.kernels.grouped_block_sparse.ops import stack_expert_plans
+    counts, indices = stack_expert_plans(counts_e, indices_e)
     return PackedExpertProjection(
-        counts=jnp.asarray(np.stack(counts_e)),
-        indices=jnp.asarray(np.stack(indices_e)), block=block,
-        density=float(np.mean(densities)), densities=tuple(densities))
+        counts=jnp.asarray(counts), indices=jnp.asarray(indices),
+        block=block, density=float(np.mean(densities)),
+        densities=tuple(densities), group=group)
 
 
-def pack_model_with_report(params, cfg: ModelConfig,
-                           block: int = 128) -> tuple:
+def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
+                           group_experts: bool = True) -> tuple:
     """Returns ``(packed, report)``: ``{(layer, name): PackedProjection}``
     for every tileable projection, plus a summary of what was *not*
     packed (the silent-``None`` paths), so serve-time coverage is
@@ -113,7 +122,7 @@ def pack_model_with_report(params, cfg: ModelConfig,
         w = tree_get(params, proj.path)
         n = int(np.prod(w.shape))
         if proj.expert_axis is not None:
-            p = pack_expert_projection(w, block)
+            p = pack_expert_projection(w, block, group=group_experts)
         else:
             p = pack_projection(w, block)
         if p is None:
@@ -126,6 +135,7 @@ def pack_model_with_report(params, cfg: ModelConfig,
                    for p in packed.values())
     report = {
         "block": block,
+        "group_experts": group_experts,
         "n_packed": len(packed),
         "n_expert_packed": n_expert,
         "packed_params": packed_params,
@@ -143,12 +153,14 @@ def pack_model_with_report(params, cfg: ModelConfig,
     return packed, report
 
 
-def pack_model(params, cfg: ModelConfig, block: int = 128) -> dict:
+def pack_model(params, cfg: ModelConfig, block: int = 128,
+               group_experts: bool = True) -> dict:
     """{(layer, name): PackedProjection | PackedExpertProjection} for
     every tileable projection (MoE expert weights get per-expert plan
     stacks). Skipped (non-tileable) projections are logged; use
     :func:`pack_model_with_report` to get the summary programmatically."""
-    packed, _ = pack_model_with_report(params, cfg, block)
+    packed, _ = pack_model_with_report(params, cfg, block,
+                                       group_experts=group_experts)
     return packed
 
 
@@ -192,21 +204,67 @@ def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
     return lin("down", h)
 
 
+def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
+                          interpret: bool = True):
+    """y[e] = x[e] @ w[e] for all experts in ONE grouped kernel launch.
+    xs: (E, M, K); ws: (E, K, ...) — trailing dims folded to N. Decode-
+    sized slot batches keep the whole M panel resident per expert
+    (``block_m=None``); prefill-sized batches fall back to tiling M by
+    the plan block."""
+    from repro.kernels.grouped_block_sparse.ops import (
+        PANEL_ROWS_MAX, grouped_blocksparse_matmul)
+    E, M, K = xs.shape
+    bm = packed.block
+    # sublane alignment for the resident panel (16 covers bf16's
+    # (16, 128) tile and f32's (8, 128)); plan-block alignment when M
+    # is large enough to need tiling
+    pad_m = (-M) % (16 if M <= PANEL_ROWS_MAX else bm)
+    if pad_m:
+        xs = jnp.pad(xs, ((0, 0), (0, pad_m), (0, 0)))
+    block_m = None if M <= PANEL_ROWS_MAX else bm
+    y = grouped_blocksparse_matmul(xs, ws.reshape(E, K, -1), packed.counts,
+                                   packed.indices, block_m=block_m,
+                                   block_k=bm, block_n=bm,
+                                   interpret=interpret)
+    if pad_m:
+        y = y[:, :M]
+    return y
+
+
 def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
-                     layer: int, interpret: bool = True):
-    """MoE feed-forward with every expert's capacity-slot batch run
-    through the block-sparse kernel via that expert's plan. Routing,
-    dispatch, and combine are ``moe.apply_moe``'s own (shared code, no
-    drift); only the expert matmuls are overridden. Like the dense
-    einsum it replaces, the capacity dispatch computes all E experts
-    over their slot buffers — the saving is each expert's skipped zero
-    tiles, not expert selection."""
+                     layer: int, interpret: bool = True,
+                     group_experts: Optional[bool] = None):
+    """MoE feed-forward with the expert matmuls run through the
+    block-sparse kernels under the layer's per-expert plan stacks.
+    Routing, dispatch, and combine are ``moe.apply_moe``'s own (shared
+    code, no drift); only the expert matmuls are overridden.
+
+    ``group_experts=None`` (default) follows the plans' own ``group``
+    flag (set by the pack stage from ``PruneRecipe.group_experts``):
+    True executes all E experts in one grouped kernel launch per
+    projection, False loops E per-expert launches (the fallback and the
+    reference in equivalence tests). Like the dense einsum they replace,
+    both paths compute all E experts over their capacity slots — the
+    saving is each expert's skipped zero tiles, not expert selection."""
     from repro.models.moe import apply_moe
-    has_plans = any(isinstance(packed_layer.get((layer, nm)),
-                               PackedExpertProjection)
-                    for nm in ("gate", "up", "down"))
-    if not has_plans:
+    plans = [p for p in (packed_layer.get((layer, nm))
+                         for nm in ("gate", "up", "down"))
+             if isinstance(p, PackedExpertProjection)]
+    if not plans:
         y, _ = apply_moe(block_params["moe"], spec, x)
+        return y
+    if group_experts is None:
+        group_experts = all(p.group for p in plans)
+
+    if group_experts:
+        def expert_group_linear(name, xs, ws):
+            plan = packed_layer.get((layer, name))
+            if isinstance(plan, PackedExpertProjection):
+                return grouped_sparse_linear(xs, ws, plan, interpret)
+            return jnp.einsum("emk,ekn->emn", xs, ws)
+
+        y, _ = apply_moe(block_params["moe"], spec, x,
+                         expert_group_linear=expert_group_linear)
         return y
 
     def expert_linear(name, e, xe, we):
@@ -221,22 +279,33 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
 
 
 def sparse_apply_ffn(block_params: dict, spec, x, packed: dict,
-                     layer: int, interpret: bool = True):
+                     layer: int, interpret: bool = True,
+                     group_experts: Optional[bool] = None):
     """Feed-forward dispatch for the serving ``mlp_apply`` hook: dense-MLP
     layers go through :func:`sparse_apply_mlp`, MoE layers through
-    :func:`sparse_apply_moe` (per-expert plans inside the dispatch)."""
+    :func:`sparse_apply_moe` (grouped one-launch expert plans by
+    default, per-expert launches with ``group_experts=False``)."""
     from repro.models.specs import MoESpec
     if isinstance(spec, MoESpec):
         return sparse_apply_moe(block_params, spec, x, packed, layer,
-                                interpret)
+                                interpret, group_experts=group_experts)
     return sparse_apply_mlp(block_params, spec, x, packed, layer, interpret)
 
 
 def flop_savings(packed: dict) -> float:
-    """Mean fraction of projection FLOPs the kernel skips."""
+    """Mean fraction of projection FLOPs the kernels skip. Expert plan
+    stacks contribute one term per expert (each expert's matmul is a
+    full projection's worth of capacity-slot FLOPs), not one term per
+    stack — so MoE sweep/Pareto rows report real per-expert savings."""
     if not packed:
         return 0.0
-    return float(np.mean([1.0 - p.density for p in packed.values()]))
+    skipped = []
+    for p in packed.values():
+        if isinstance(p, PackedExpertProjection):
+            skipped.extend(1.0 - d for d in p.densities)
+        else:
+            skipped.append(1.0 - p.density)
+    return float(np.mean(skipped))
 
 
 # ----------------------------------------------- plan (de)serialization
@@ -258,6 +327,7 @@ def plans_to_host(packed: dict) -> tuple:
         if isinstance(p, PackedExpertProjection):
             meta[key]["expert"] = True
             meta[key]["densities"] = list(p.densities)
+            meta[key]["group"] = bool(p.group)
     return arrays, meta
 
 
@@ -273,7 +343,8 @@ def plans_from_host(arrays: dict, meta: dict) -> dict:
             packed[(int(layer), name)] = PackedExpertProjection(
                 counts=counts, indices=indices, block=int(m["block"]),
                 density=float(m["density"]),
-                densities=tuple(float(d) for d in m["densities"]))
+                densities=tuple(float(d) for d in m["densities"]),
+                group=bool(m.get("group", True)))
         else:
             packed[(int(layer), name)] = PackedProjection(
                 counts=counts, indices=indices,

@@ -1,0 +1,63 @@
+"""The benchmark-regression guard's comparison rules: ±tolerance bands
+around committed references, hard min/max floors, loud failure on
+missing gated metrics — and the committed baseline itself must parse
+and only gate metrics run.py actually emits."""
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.regression import DEFAULT_BASELINE, check  # noqa: E402
+
+
+def _metrics(**rows):
+    return {"rows": rows}
+
+
+def test_ref_band():
+    base = {"tolerance": 0.2, "metrics": {"a.x": {"ref": 1.0}}}
+    assert not check(_metrics(a={"x": 1.0}), base)
+    assert not check(_metrics(a={"x": 1.19}), base)
+    assert not check(_metrics(a={"x": 0.81}), base)
+    assert check(_metrics(a={"x": 1.3}), base)
+    assert check(_metrics(a={"x": 0.7}), base)
+
+
+def test_min_max_floors():
+    base = {"metrics": {"a.speedup": {"min": 1.2},
+                        "a.launches": {"max": 1.0}}}
+    assert not check(_metrics(a={"speedup": 1.2, "launches": 1.0}), base)
+    fails = check(_metrics(a={"speedup": 1.1, "launches": 3.0}), base)
+    assert len(fails) == 2
+    assert any("below floor" in f for f in fails)
+    assert any("above ceiling" in f for f in fails)
+
+
+def test_missing_metric_fails_loudly():
+    base = {"metrics": {"gone.x": {"min": 0.0}}}
+    fails = check(_metrics(a={"x": 1.0}), base)
+    assert fails and "missing" in fails[0]
+
+
+def test_committed_baseline_is_wellformed():
+    with open(DEFAULT_BASELINE) as f:
+        base = json.load(f)
+    assert 0.0 < base["tolerance"] < 1.0
+    assert base["metrics"], "baseline gates nothing"
+    # every gated row must be a benchmark run.py emits
+    from benchmarks import run as bench_run
+    src = open(bench_run.__file__).read()
+    for key, rule in base["metrics"].items():
+        row, _, metric = key.partition(".")
+        assert f'"{row}"' in src, f"baseline gates unknown row {row!r}"
+        assert metric, key
+        assert set(rule) <= {"ref", "min", "max"}, (key, rule)
+    # the acceptance criteria stay pinned: grouped >= 1.2x the loop,
+    # exactly one launch per projection vs E
+    assert base["metrics"]["moe_kernel_bench.grouped_vs_loop"]["min"] >= 1.2
+    g = base["metrics"]["moe_kernel_bench.grouped_launches_per_proj"]
+    assert g["max"] == 1.0
+    e = base["metrics"]["moe_kernel_bench.loop_launches_per_proj"]
+    assert e["min"] >= 2.0

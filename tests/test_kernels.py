@@ -8,6 +8,10 @@ from repro.kernels.block_sparse.ops import (block_mask_from_weight_mask,
                                             blocksparse_matmul, plan_blocks)
 from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
 from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.grouped_block_sparse.ops import (
+    grouped_blocksparse_matmul, stack_expert_plans)
+from repro.kernels.grouped_block_sparse.ref import \
+    grouped_block_sparse_matmul_ref
 from repro.kernels.ssd_scan.ops import ssd_apply
 from repro.kernels.wanda_metric.ops import outlier_ratio as kernel_outlier
 from repro.kernels.wanda_metric.ref import outlier_ratio_ref
@@ -47,6 +51,87 @@ def test_block_sparse_skips_zero_blocks():
     w = jnp.ones((256, 256)) * jnp.asarray(mask)
     y = blocksparse_matmul(x, w, counts, idx, interpret=True)
     assert float(jnp.abs(y[:, 128:]).max()) == 0.0
+
+
+def _expert_problem(E=4, M=96, K=64, N=80, block=16, keep=0.4, seed=0):
+    """Random per-expert weights with diverging tile densities + the
+    stacked grouped plan built from independent per-expert plans."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(E, M, K)).astype(np.float32))
+    w = rng.normal(size=(E, K, N)).astype(np.float32)
+    masks = np.zeros((E, K, N), bool)
+    for e in range(E):
+        # tile-level masks so pruned tiles are exactly skippable tiles;
+        # density rises with e => per-expert max_nnz diverges
+        bm = rng.random((K // block, N // block)) < keep + 0.15 * e
+        bm[0, 0] = True                     # never a fully empty plan
+        masks[e] = np.repeat(np.repeat(bm, block, 0), block, 1)
+    w = np.where(masks, w, 0.0)
+    counts_e, indices_e, bms = [], [], []
+    for e in range(E):
+        bm = block_mask_from_weight_mask(masks[e], block, block)
+        c, i = plan_blocks(bm)
+        counts_e.append(c)
+        indices_e.append(i)
+        bms.append(bm)
+    counts, indices = stack_expert_plans(counts_e, indices_e)
+    return (x, jnp.asarray(w), jnp.asarray(counts), jnp.asarray(indices),
+            counts_e, indices_e, jnp.asarray(np.stack(bms)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_block_sparse_vs_ref(dtype):
+    B = 16
+    x, w, counts, indices, _, _, bms = _expert_problem()
+    y = grouped_blocksparse_matmul(x.astype(dtype), w.astype(dtype),
+                                   counts, indices, block_k=B, block_n=B,
+                                   interpret=True)
+    yref = grouped_block_sparse_matmul_ref(x.astype(dtype), w.astype(dtype),
+                                           bms, B, B)
+    err = jnp.abs(y.astype(jnp.float32) - yref.astype(jnp.float32)).max()
+    scale = jnp.abs(yref.astype(jnp.float32)).max() + 1e-9
+    assert float(err / scale) < TOL[dtype]
+
+
+@pytest.mark.parametrize("block_m", [None, 16, 48])
+def test_grouped_matches_per_expert_launches(block_m):
+    """One grouped launch == E per-expert block_sparse launches,
+    bitwise (same f32 accumulation order per expert), for both the
+    resident-panel default and explicit M tiling."""
+    B = 16
+    x, w, counts, indices, counts_e, indices_e, _ = _expert_problem()
+    y = grouped_blocksparse_matmul(x, w, counts, indices, block_m=block_m,
+                                   block_k=B, block_n=B, interpret=True)
+    for e in range(x.shape[0]):
+        ye = blocksparse_matmul(x[e], w[e], counts[e], indices[e],
+                                block_m=16, block_k=B, block_n=B,
+                                interpret=True)
+        np.testing.assert_array_equal(np.asarray(y[e]), np.asarray(ye))
+        # and vs each expert's own (unpadded-max_nnz) solo plan
+        solo = blocksparse_matmul(x[e], w[e], counts_e[e], indices_e[e],
+                                  block_m=16, block_k=B, block_n=B,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(y[e]), np.asarray(solo),
+                                   rtol=0, atol=2e-5)
+
+
+def test_grouped_skips_fully_pruned_expert_column():
+    """count==0 block-columns produce exact zeros, per expert — a column
+    dense in expert 1 can be fully skipped in expert 0."""
+    B, E, K, N = 16, 2, 32, 32
+    masks = np.zeros((E, K, N), bool)
+    masks[0, :, :16] = True                 # expert 0: column 1 empty
+    masks[1, :, :] = True                   # expert 1: fully dense
+    w = np.where(masks, 1.0, 0.0).astype(np.float32)
+    counts_e, indices_e = zip(*(plan_blocks(
+        block_mask_from_weight_mask(masks[e], B, B)) for e in range(E)))
+    counts, indices = stack_expert_plans(counts_e, indices_e)
+    x = jnp.ones((E, 16, K), jnp.float32)
+    y = grouped_blocksparse_matmul(x, jnp.asarray(w), jnp.asarray(counts),
+                                   jnp.asarray(indices), block_k=B,
+                                   block_n=B, interpret=True)
+    assert float(jnp.abs(y[0, :, 16:]).max()) == 0.0
+    assert float(jnp.abs(y[1]).min()) > 0.0
 
 
 @pytest.mark.parametrize("shape", [(512, 768), (256, 256), (1024, 512)])

@@ -1,7 +1,11 @@
 """Per-expert block-sparse serving: MoE expert weights are planned (not
 skipped) by the pack stage, the MoE dispatch routes each expert's slots
-through the block-sparse kernel, and expert plans round-trip through the
-PrunedArtifact bundle — all token-identical to dense in interpret mode.
+through the block-sparse kernels — the grouped one-launch-for-all-
+experts kernel by default, the per-expert launch loop as the
+``group_experts=False`` fallback — and expert plans round-trip through
+the PrunedArtifact bundle with their ``group`` flag. Grouped, loop, and
+dense are all token-identical in interpret mode, for both engines, both
+in-memory and after save/load.
 """
 import jax
 import jax.numpy as jnp
@@ -63,7 +67,47 @@ def test_pack_report_has_no_expert_skips(moe_artifact):
         assert p.counts.shape[0] == 4 and p.indices.ndim == 3
         # wanda_block at p=0.65 leaves real zero tiles in every expert
         assert all(0.0 < d < 1.0 for d in p.densities)
+        assert p.group                     # grouped kernel is the default
     assert flop_savings(art.packed) > 0.2
+
+
+def test_flop_savings_counts_each_expert(moe_artifact):
+    """Expert stacks contribute one term per expert, not one per stack."""
+    art, _ = moe_artifact
+    expected = []
+    for p in art.packed.values():
+        if isinstance(p, PackedExpertProjection):
+            expected.extend(1.0 - d for d in p.densities)
+        else:
+            expected.append(1.0 - p.density)
+    assert flop_savings(art.packed) == pytest.approx(np.mean(expected))
+    # a lopsided stack: stack mean must not drown the sparse expert
+    lop = {(0, "up"): PackedExpertProjection(
+        counts=jnp.zeros((2, 1), jnp.int32),
+        indices=jnp.zeros((2, 1, 1), jnp.int32), block=16,
+        density=0.5, densities=(0.0, 1.0))}
+    assert flop_savings(lop) == pytest.approx(0.5)
+
+
+def test_group_experts_recipe_knob_reaches_plans(moe_artifact):
+    """recipe.group_experts=False packs loop-mode plan stacks (and the
+    flag survives the host round-trip)."""
+    art, _ = moe_artifact
+    recipe = art.recipe.replace(group_experts=False)
+    cfg = moe_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    loop_art = MosaicPipeline(recipe).run(params, cfg)
+    assert loop_art.report["pack"]["group_experts"] is False
+    stacks = [p for p in loop_art.packed.values()
+              if isinstance(p, PackedExpertProjection)]
+    assert stacks and all(not p.group for p in stacks)
+    arrays, meta = plans_to_host(loop_art.packed)
+    back = plans_from_host(arrays, meta)
+    assert all(not p.group for p in back.values()
+               if isinstance(p, PackedExpertProjection))
+    # the default artifact's plans say group=True in meta
+    _, meta_default = plans_to_host(art.packed)
+    assert any(m.get("group") for m in meta_default.values())
 
 
 def test_pack_expert_projection_non_tileable_returns_none():
@@ -116,23 +160,30 @@ def test_expert_plans_host_roundtrip(moe_artifact):
 # -------------------------------------- token-identical serving (payoff)
 
 def test_moe_sparse_engine_token_identical(moe_artifact):
+    """Grouped (default) AND per-expert loop, in-memory AND loaded, all
+    token-identical to dense through the static engine."""
     art, loaded = moe_artifact
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
                                 art.cfg.vocab)
 
-    def gen(params, cfg, packed):
+    def gen(params, cfg, packed, group=None):
         eng = Engine(params, cfg, max_seq=24, compute_dtype=jnp.float32,
-                     cache_dtype=jnp.float32, packed=packed)
+                     cache_dtype=jnp.float32, packed=packed,
+                     group_experts=group)
         return np.asarray(eng.generate(prompt, 8))
 
     dense = gen(art.params, art.cfg, None)
-    sparse_mem = gen(art.params, art.cfg, art.packed)
-    sparse_loaded = gen(loaded.params, loaded.cfg, loaded.packed)
-    np.testing.assert_array_equal(dense, sparse_mem)
-    np.testing.assert_array_equal(dense, sparse_loaded)
+    for params, cfg, packed in ((art.params, art.cfg, art.packed),
+                                (loaded.params, loaded.cfg, loaded.packed)):
+        np.testing.assert_array_equal(dense, gen(params, cfg, packed))
+        np.testing.assert_array_equal(
+            dense, gen(params, cfg, packed, group=False))
 
 
 def test_moe_sparse_continuous_engine_token_identical(moe_artifact):
+    """Grouped (default) AND per-expert loop, in-memory AND from a
+    loaded artifact, all token-identical to dense through the
+    continuous-batching engine."""
     art, loaded = moe_artifact
     rng = np.random.default_rng(2)
     reqs = [Request(uid=i, prompt=rng.integers(0, 256, (n,)).tolist(),
@@ -141,9 +192,18 @@ def test_moe_sparse_continuous_engine_token_identical(moe_artifact):
     kw = dict(max_slots=2, max_seq=32, compute_dtype=jnp.float32,
               cache_dtype=jnp.float32)
     dense, _ = ContinuousEngine(art.params, art.cfg, **kw).run(reqs)
-    sparse, _ = ContinuousEngine(art.params, art.cfg, packed=art.packed,
-                                 **kw).run(reqs)
-    from_art, _ = ContinuousEngine.from_artifact(loaded, **kw).run(reqs)
-    for d, s, f in zip(dense, sparse, from_art):
-        assert d.tokens == s.tokens, f"uid {d.request.uid} diverged (mem)"
-        assert d.tokens == f.tokens, f"uid {d.request.uid} diverged (load)"
+    variants = {
+        "mem-grouped": ContinuousEngine(art.params, art.cfg,
+                                        packed=art.packed, **kw),
+        "mem-loop": ContinuousEngine(art.params, art.cfg,
+                                     packed=art.packed,
+                                     group_experts=False, **kw),
+        "load-grouped": ContinuousEngine.from_artifact(loaded, **kw),
+        "load-loop": ContinuousEngine.from_artifact(
+            loaded, group_experts=False, **kw),
+    }
+    for label, eng in variants.items():
+        finished, _ = eng.run(reqs)
+        for d, s in zip(dense, finished):
+            assert d.tokens == s.tokens, \
+                f"uid {d.request.uid} diverged ({label})"
