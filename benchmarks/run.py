@@ -153,7 +153,10 @@ def _derive(name: str, result) -> str:
         if name == "serve_bench":
             return (f"continuous_vs_static={result['speedup']:.2f}x"
                     f";sparse_agrees={result['sparse_agrees']}"
-                    f";flops_skipped={result['flops_skipped']:.2f}")
+                    f";flops_skipped={result['flops_skipped']:.2f}"
+                    f";paged_concurrency="
+                    f"{result['paged_concurrency_vs_contiguous']:.2f}x"
+                    f";prefix_hit_rate={result['prefix_hit_rate']:.2f}")
         if name == "prune_pipeline":
             return ";".join(f"{r['arch']}={r['seconds']:.1f}s"
                             for r in result)
@@ -188,7 +191,13 @@ def _metrics(name: str, result, us: float) -> dict:
         elif name == "serve_bench":
             m.update({"continuous_vs_static": result["speedup"],
                       "sparse_agrees": float(result["sparse_agrees"]),
-                      "flops_skipped": result["flops_skipped"]})
+                      "flops_skipped": result["flops_skipped"],
+                      "paged_agrees": float(result["paged_agrees"]),
+                      "paged_concurrency_vs_contiguous":
+                          result["paged_concurrency_vs_contiguous"],
+                      "paged_vs_contiguous_tokens":
+                          result["paged_vs_contiguous_tokens"],
+                      "prefix_hit_rate": result["prefix_hit_rate"]})
             for r in result["rows"]:
                 m[f"{r['engine']}_tokens_per_s"] = r["tokens_per_s"]
         elif name == "prune_pipeline":

@@ -24,6 +24,7 @@ from repro.core.recipe import CalibrationSpec, PruneRecipe
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
 from repro.serve.batching import ContinuousEngine, latency_percentiles
+from repro.serve.config import ServeConfig
 from repro.serve.scheduler import Request
 from repro.serve.sparse import flop_savings
 from repro.train.optimizer import OptConfig
@@ -83,9 +84,10 @@ def main():
                         prompt=corpus.batch(i, 1, s0)[0, :s0].tolist(),
                         max_new_tokens=16)
                 for i, s0 in enumerate(rng.integers(8, 33, size=8).tolist())]
-        eng = ContinuousEngine.from_artifact(loaded, max_slots=4, max_seq=64,
-                                             compute_dtype=jnp.float32,
-                                             cache_dtype=jnp.float32)
+        serve_cfg = ServeConfig(max_slots=4, max_seq=64, block_size=16,
+                                compute_dtype=jnp.float32,
+                                cache_dtype=jnp.float32)
+        eng = ContinuousEngine.from_artifact(loaded, serve_cfg)
         finished, stats = eng.run(reqs)
     lat = latency_percentiles(finished)
     print(f"continuous+sparse: {stats.generated_tokens} tokens in "

@@ -9,6 +9,7 @@ from repro.core.prune_controller import run_pruning_controller
 from repro.core.rank_controller import run_ranking_controller
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
+from repro.serve.config import ServeConfig
 from repro.serve.engine import Engine
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import Trainer
@@ -53,8 +54,9 @@ def main():
           f"pruned {ppl(res.params, res.cfg):.1f}")
 
     # 5. generate with the pruned SLM
-    eng = Engine(res.params, res.cfg, max_seq=48,
-                 compute_dtype=jnp.float32, cache_dtype=jnp.float32)
+    eng = Engine(res.params, res.cfg,
+                 ServeConfig(max_seq=48, compute_dtype=jnp.float32,
+                             cache_dtype=jnp.float32))
     prompt = jnp.asarray(corpus.batch(999, 2, 16)[:, :16])
     out = eng.generate(prompt, n_new=16)
     print("generated:", out[0, 16:].tolist())

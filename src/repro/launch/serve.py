@@ -18,6 +18,15 @@ artifact-driven.
 continuous`` runs the slot-pool ``ContinuousEngine``. ``--sparse``
 routes the serving MLPs through the Pallas block-sparse kernel using
 the artifact's saved ``PackedProjection`` plans.
+
+``--block-size N`` switches the continuous engine to the paged KV pool
+(``--n-blocks`` sizes the arena, ``--prefill-chunk`` interleaves long
+prompt prefills with decode); ``--shared-prefix`` demos prefix sharing
+by giving every request one common system prompt under a shared
+``prefix_id``:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
+      continuous --block-size 16 --prefill-chunk 16 --shared-prefix
 """
 from __future__ import annotations
 
@@ -36,6 +45,7 @@ from repro.core.recipe import CalibrationSpec, PruneRecipe
 from repro.data.pipeline import SyntheticCorpus
 from repro.models import transformer as T
 from repro.serve.batching import ContinuousEngine, latency_percentiles
+from repro.serve.config import ServeConfig
 from repro.serve.engine import Engine
 from repro.serve.scheduler import Request
 
@@ -125,6 +135,18 @@ def main() -> None:
                     help="fall back to one block-sparse launch per MoE "
                          "expert instead of the grouped one-launch kernel")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--block-size", type=int, default=None, metavar="N",
+                    help="continuous engine: page the KV cache into "
+                         "N-token blocks (default: contiguous slots)")
+    ap.add_argument("--n-blocks", type=int, default=None, metavar="K",
+                    help="paged: arena size in blocks (default: enough "
+                         "for max_slots full sequences)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="paged: split prompt prefill into C-token "
+                         "chunks interleaved with decode ticks")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="paged demo: prepend one shared system prompt "
+                         "to every request under a common prefix_id")
     args = ap.parse_args()
 
     params, cfg, packed, source = _load_or_prune(args)
@@ -138,9 +160,14 @@ def main() -> None:
     max_seq = args.prompt_len + args.new_tokens
     group = False if args.no_group_experts else None
     if args.engine == "static":
-        eng = Engine(params, cfg, max_seq=max_seq,
-                     compute_dtype=jnp.float32, cache_dtype=jnp.float32,
-                     packed=packed, group_experts=group)
+        if args.block_size:
+            print("note: --block-size is a continuous-engine flag; "
+                  "the static engine always uses a contiguous cache")
+        serve_cfg = ServeConfig(max_seq=max_seq,
+                                compute_dtype=jnp.float32,
+                                cache_dtype=jnp.float32,
+                                group_experts=group)
+        eng = Engine(params, cfg, serve_cfg, packed=packed)
         prompt = jnp.asarray(
             corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
         t0 = time.perf_counter()
@@ -153,25 +180,41 @@ def main() -> None:
         print("sample:", out[0, -args.new_tokens:].tolist()[:16], "...")
         return
 
-    # continuous: mixed-length requests through the slot pool
+    # continuous: mixed-length requests through the slot / block pool
     rng = np.random.default_rng(0)
+    shared = (corpus.batch(99, 1, args.prompt_len)[0].tolist()
+              if args.shared_prefix else [])
     reqs = []
     for i in range(args.batch):
         s0 = int(rng.integers(max(args.prompt_len // 2, 1),
                               args.prompt_len + 1))
-        prompt = corpus.batch(i, 1, s0)[0, :s0].tolist()
+        prompt = shared + corpus.batch(i, 1, s0)[0, :s0].tolist()
         reqs.append(Request(uid=i, prompt=prompt,
-                            max_new_tokens=args.new_tokens))
-    eng = ContinuousEngine(params, cfg, max_slots=args.max_slots,
-                           max_seq=max_seq, compute_dtype=jnp.float32,
-                           cache_dtype=jnp.float32, packed=packed,
-                           group_experts=group)
+                            max_new_tokens=args.new_tokens,
+                            prefix_id="system" if shared else None))
+    max_seq = max(len(r.prompt) for r in reqs) + args.new_tokens
+    if args.block_size:
+        max_seq = -(-max_seq // args.block_size) * args.block_size
+    serve_cfg = ServeConfig(max_slots=args.max_slots, max_seq=max_seq,
+                            block_size=args.block_size,
+                            n_blocks=args.n_blocks,
+                            prefill_chunk=args.prefill_chunk,
+                            compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32, group_experts=group)
+    eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
     finished, stats = eng.run(reqs, temperature=args.temperature)
     lat = latency_percentiles(finished)
     print(f"served {len(finished)} requests, {stats.generated_tokens} tokens "
           f"in {stats.wall_s:.2f}s ({stats.tokens_per_s:.1f} tok/s "
           f"incl. compile), slot util {stats.slot_utilization:.0%}, "
           f"p50 {lat['p50']:.0f}ms p99 {lat['p99']:.0f}ms")
+    if serve_cfg.paged:
+        print(f"paged: block_size={serve_cfg.block_size} "
+              f"arena={serve_cfg.arena_blocks} blocks, "
+              f"peak concurrency {stats.peak_concurrency}, "
+              f"{stats.prefill_chunks} prefill chunks, "
+              f"{stats.prompt_blocks_shared} prompt blocks shared "
+              f"(hit rate {stats.prefix_hit_rate:.0%})")
     print("sample:", finished[0].tokens[:16], "...")
 
 

@@ -134,10 +134,63 @@ def _chunked_causal_attention(q, k, v, positions):
     return jnp.concatenate(outs, axis=1)
 
 
+# ------------------------------------------------------------ paged KV
+
+def _paged_rows(block_tables: jax.Array, pos: jax.Array,
+                block_size: int) -> jax.Array:
+    """Physical arena rows for logical positions ``pos`` (B, S) through
+    per-sequence ``block_tables`` (B, max_blocks)."""
+    logical = jnp.clip(pos // block_size, 0, block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(block_tables, logical, axis=1)
+    return phys * block_size + pos % block_size
+
+
+def paged_write(cache_kv: jax.Array, new: jax.Array,
+                block_tables: jax.Array, start: jax.Array,
+                n_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Scatter ``new`` (B, S, n_kv, D) K/V rows into a paged arena
+    ``cache_kv`` (n_blocks, block_size, n_kv, D) at logical positions
+    ``start[b] + [0, S)`` of each sequence's ``block_tables`` row.
+
+    Rows past ``n_valid[b]`` (right-padded prefill positions) are
+    redirected into the arena's last block — the reserved scratch block
+    the allocator never hands out — so padding never corrupts a live
+    block. jit-safe: ``start``/``n_valid`` may be traced.
+    """
+    nb, bs = cache_kv.shape[0], cache_kv.shape[1]
+    B, S = new.shape[0], new.shape[1]
+    flat = cache_kv.reshape(nb * bs, *cache_kv.shape[2:])
+    pos = start[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    rows = _paged_rows(block_tables, pos, bs)
+    if n_valid is not None:
+        ok = jnp.arange(S, dtype=jnp.int32)[None, :] < n_valid[:, None]
+        rows = jnp.where(ok, rows, nb * bs - 1)     # scratch block
+    flat = flat.at[rows.reshape(-1)].set(
+        new.astype(flat.dtype).reshape(B * S, *new.shape[2:]))
+    return flat.reshape(cache_kv.shape)
+
+
+def paged_gather(cache_kv: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Gather each sequence's logical KV view (B, max_blocks*block_size,
+    n_kv, D) from the paged arena via its block table."""
+    nb, bs = cache_kv.shape[0], cache_kv.shape[1]
+    flat = cache_kv.reshape(nb * bs, *cache_kv.shape[2:])
+    B, M = block_tables.shape
+    rows = (block_tables[:, :, None] * bs
+            + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+    return flat[rows.reshape(B, M * bs)]
+
+
 def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
                     positions: jax.Array, cache: Optional[dict] = None,
-                    cache_index: Optional[jax.Array] = None):
-    """Returns (out, new_cache). cache: {'k','v': (B, S_max, n_kv, D)}."""
+                    cache_index: Optional[jax.Array] = None,
+                    block_tables: Optional[jax.Array] = None,
+                    n_valid: Optional[jax.Array] = None):
+    """Returns (out, new_cache). cache: {'k','v': (B, S_max, n_kv, D)},
+    or a paged arena {'k','v': (n_blocks, block_size, n_kv, D)} when
+    ``block_tables`` (B, max_blocks) maps each sequence's logical blocks
+    onto arena blocks; ``n_valid`` (B,) masks right-padded positions of
+    a padded (chunked) prefill."""
     dtype = x.dtype
     tap("attn_qkv", x)
     q = jnp.einsum("bsd,dhe->bshe", x, params["q"].astype(dtype))
@@ -175,6 +228,33 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
         return kk, vv
 
     new_cache = None
+    if cache is not None and block_tables is not None:
+        # paged pool: scatter this step's K/V rows through the block
+        # table, then attend over the gathered logical view. The view
+        # width (max_blocks * block_size) matches the contiguous pool's
+        # S_max, so masked softmax sums are bitwise-identical to the
+        # contiguous path — garbage rows in unwritten blocks get exact
+        # zero probability (fp32 exp(-1e30 - max) underflows to 0).
+        ci = jnp.asarray(cache_index, jnp.int32)
+        if ci.ndim == 0:
+            ci = jnp.broadcast_to(ci, (x.shape[0],))
+        ck = paged_write(cache["k"], k, block_tables, ci, n_valid)
+        cv = paged_write(cache["v"], v, block_tables, ci, n_valid)
+        new_cache = {"k": ck, "v": cv}
+        kview = paged_gather(ck, block_tables)
+        vview = paged_gather(cv, block_tables)
+        T_kv = kview.shape[1]
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(T_kv, dtype=jnp.int32)[None, :],
+            (x.shape[0], T_kv))
+        nv = (n_valid if n_valid is not None
+              else jnp.full((x.shape[0],), x.shape[1], jnp.int32))
+        valid = kv_pos < (ci + nv)[:, None]
+        out = _dense_attention(q, kview, vview, positions, kv_pos,
+                               causal=spec.causal, kv_valid=valid)
+        tap("attn_o", out, channel_axes=(-2, -1))
+        y = jnp.einsum("bshe,hed->bsd", out, params["o"].astype(dtype))
+        return hint(y, "batch", "seq", "embed"), new_cache
     if cache is not None:
         # write current step(s) at cache_index, attend over full cache.
         # cache_index is a scalar (whole batch at one offset: train-style
@@ -239,6 +319,15 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
 def init_attention_cache(batch: int, s_max: int, spec: AttentionSpec,
                          dtype=jnp.bfloat16) -> dict:
     shape = (batch, s_max, spec.n_kv, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_attention_cache(n_blocks: int, block_size: int,
+                               spec: AttentionSpec,
+                               dtype=jnp.bfloat16) -> dict:
+    """A paged KV arena: ``n_blocks`` fixed-size blocks shared by every
+    sequence (the last block is the padding scratch block)."""
+    shape = (n_blocks, block_size, spec.n_kv, spec.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

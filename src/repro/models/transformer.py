@@ -103,6 +103,49 @@ def init_cache_pool(cfg: ModelConfig, max_slots: int, max_seq: int,
     return init_cache(cfg, max_slots, max_seq, dtype)
 
 
+def init_paged_pool(cfg: ModelConfig, n_blocks: int, block_size: int,
+                    dtype=jnp.bfloat16):
+    """A paged KV pool: per attention layer, one ``(n_blocks + 1,
+    block_size, n_kv, D)`` arena of fixed-size KV blocks shared by every
+    request through per-request block tables (``block_tables`` in
+    ``forward``), instead of one contiguous ``max_seq`` region per slot.
+
+    The extra last block (index ``n_blocks``) is the *scratch* block:
+    right-padded prefill positions and inactive decode slots write there
+    so padding never corrupts a live block; the host-side allocator
+    (``repro.serve.paging.BlockAllocator``) never hands it out.
+
+    Attention-only, unrolled configs: an SSM mixer's state is recurrent,
+    not positional, so it has nothing to page.
+    """
+    if cfg.scan_layers:
+        raise ValueError("paged pools require an unrolled config "
+                         "(cfg.replace(scan_layers=False))")
+    pool = []
+    for i in range(cfg.n_layers):
+        spec = cfg.layer(i)
+        if not isinstance(spec.mixer, AttentionSpec):
+            raise ValueError("paged KV pools support attention mixers "
+                             f"only (layer {i} is {type(spec.mixer).__name__})")
+        pool.append({"attn": L.init_paged_attention_cache(
+            n_blocks + 1, block_size, spec.mixer, dtype)})
+    return pool
+
+
+def copy_pool_block(pool, src, dst):
+    """Copy arena block ``src`` -> ``dst`` in every layer of a paged
+    pool — the device half of copy-on-write when a writer would touch a
+    block shared between requests. jit-safe (``src``/``dst`` may be
+    traced)."""
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    return jax.tree.map(
+        lambda leaf: jax.lax.dynamic_update_slice_in_dim(
+            leaf, jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=0),
+            dst, axis=0),
+        pool)
+
+
 def write_cache_slot(pool, row, slot):
     """Scatter a batch-1 cache ``row`` into ``pool`` at slot ``slot``.
 
@@ -120,13 +163,16 @@ def write_cache_slot(pool, row, slot):
 def apply_block(block_params: dict, cfg: ModelConfig, spec: LayerSpec,
                 x: jax.Array, positions: jax.Array,
                 cache: Optional[dict], cache_index,
-                layer: int = 0, mlp_apply=None):
+                layer: int = 0, mlp_apply=None,
+                block_tables: Optional[jax.Array] = None,
+                n_valid: Optional[jax.Array] = None):
     h = L.apply_norm(block_params["norm1"], cfg.norm, x)
     new_cache = {}
     if isinstance(spec.mixer, AttentionSpec):
         mix, nc = L.apply_attention(
             block_params["attn"], spec.mixer, h, positions,
-            cache["attn"] if cache is not None else None, cache_index)
+            cache["attn"] if cache is not None else None, cache_index,
+            block_tables=block_tables, n_valid=n_valid)
         if nc is not None:
             new_cache["attn"] = nc
     else:
@@ -155,13 +201,20 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
             positions: Optional[jax.Array] = None,
             frontend_embeds: Optional[jax.Array] = None,
             cache=None, cache_index=None,
-            compute_dtype=jnp.bfloat16, mlp_apply=None):
+            compute_dtype=jnp.bfloat16, mlp_apply=None,
+            block_tables: Optional[jax.Array] = None,
+            n_valid: Optional[jax.Array] = None):
     """Returns (logits, new_cache, aux_loss).
 
     tokens: (B, S) int32. frontend_embeds: (B, F, d) stub embeddings that
     replace the first F token embeddings (VLM patches / audio frames).
     cache + cache_index: decode mode (tokens are the new step(s));
     cache_index is a scalar or a per-sequence (B,) vector (slot pool).
+    block_tables: (B, max_blocks) int32 — ``cache`` is a paged pool
+    (``init_paged_pool``) and each sequence's KV rows are scattered /
+    gathered through its block-table row; ``n_valid`` (B,) masks
+    right-padded positions of a padded (chunked) prefill into the
+    scratch block. Unrolled configs only.
     mlp_apply: optional ``(block_params, ffn_spec, x, layer) -> y``
     override for FFN layers (``ffn_spec`` is an ``MLPSpec`` or
     ``MoESpec``) — the serving block-sparse fast path; MoE layers run
@@ -173,6 +226,9 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
     if mlp_apply is not None and cfg.scan_layers:
         raise ValueError("mlp_apply needs static layer indices; use an "
                          "unrolled config (scan_layers=False)")
+    if block_tables is not None and cfg.scan_layers:
+        raise ValueError("paged caches need an unrolled config "
+                         "(scan_layers=False)")
     if positions is None:
         if cache_index is not None:
             ci = jnp.asarray(cache_index, jnp.int32)
@@ -229,7 +285,9 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
             def body(bp, xh, c, spec=spec_i, layer=i):
                 return apply_block(bp, cfg, spec, xh, positions, c,
                                    cache_index, layer=layer,
-                                   mlp_apply=mlp_apply)
+                                   mlp_apply=mlp_apply,
+                                   block_tables=block_tables,
+                                   n_valid=n_valid)
             if cfg.remat:
                 body = jax.checkpoint(
                     body, policy=jax.checkpoint_policies.nothing_saveable)

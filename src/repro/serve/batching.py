@@ -1,17 +1,28 @@
 """Continuous-batching generation engine over a slot-based KV pool.
 
-One jitted decode step runs every tick over *all* slots of a fixed
-``(max_slots, max_seq)`` cache pool (per-slot lengths as the vector
-``cache_index``), and prefills are admitted between ticks into whatever
-slots are free — so requests of different lengths enter and leave the
-batch continuously without recompiling the decode step. Prompts are
-right-padded to a bucket multiple to bound prefill retraces; padded
-positions are masked by the per-slot length and overwritten as the
-sequence grows.
+One jitted decode step runs every tick over *all* slots of the KV pool,
+and prefills are admitted between ticks into whatever slots are free —
+so requests of different lengths enter and leave the batch continuously
+without recompiling the decode step. Prompts are right-padded to a
+bucket multiple to bound prefill retraces; padded positions are masked
+by the per-slot length and overwritten as the sequence grows.
+
+Two pool backends, selected by ``ServeConfig.block_size``:
+
+- **contiguous** (``block_size=None``): one ``(max_slots, max_seq)``
+  region per slot, per-slot lengths as the vector ``cache_index``.
+- **paged** (``block_size=N``): fixed-size KV blocks in one shared
+  arena (``transformer.init_paged_pool``), per-request block tables
+  threaded through the jitted steps, a host-side block allocator with
+  refcounts + copy-on-write, prefix sharing keyed on
+  ``Request.prefix_id``, and chunked prefill — long prompts enter the
+  cache in block-multiple chunks that interleave with decode ticks
+  instead of stalling them (``repro.serve.paging``).
 
 With a ``packed`` plan (``sparse.pack_model`` on a Mosaic-pruned model)
 the MLP projections run through the Pallas block-sparse kernel inside
-the same jitted steps — the pruned fast path in the serving hot loop.
+the same jitted steps — the pruned fast path in the serving hot loop —
+on either backend.
 """
 from __future__ import annotations
 
@@ -25,8 +36,13 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.specs import AttentionSpec, ModelConfig
-from repro.serve.engine import (make_prefill_step, make_serve_step,
-                                make_sparse_mlp_apply, sample_token)
+from repro.serve.config import ServeConfig
+from repro.serve.engine import (_legacy_serve_config, make_prefill_step,
+                                make_serve_step, make_sparse_mlp_apply,
+                                request_key, sample_tokens)
+from repro.serve.paging import (BlockAllocator, PrefixCache,
+                                make_paged_decode_step,
+                                make_paged_prefill_step)
 from repro.serve.scheduler import Finished, Scheduler
 
 
@@ -37,61 +53,108 @@ class ServeStats:
     generated_tokens: int
     tokens_per_s: float
     slot_utilization: float     # mean active/max_slots over decode ticks
-    prefills: int
+    prefills: int               # completed prompt prefills
     rejected: int
+    prefill_chunks: int = 0     # jitted prefill launches (>= prefills
+    #                             when chunked prefill splits prompts)
+    peak_concurrency: int = 0   # max sequences holding cache at once
+    prompt_blocks_shared: int = 0   # paged: prefix-cache block hits
+    prefix_hit_rate: float = 0.0    # shared / shareable prompt blocks
 
 
 class ContinuousEngine:
     """Slot-pool engine: FIFO admission, per-tick batched decode,
-    immediate slot reuse after eviction."""
+    immediate slot reuse after eviction. Construct with a
+    :class:`~repro.serve.config.ServeConfig` (the legacy kwarg surface
+    is a deprecation shim)."""
 
-    def __init__(self, params, cfg: ModelConfig, max_slots: int,
-                 max_seq: int, compute_dtype=jnp.bfloat16,
-                 cache_dtype=jnp.bfloat16, packed: Optional[dict] = None,
-                 interpret: bool = True, prefill_multiple: int = 16,
+    def __init__(self, params, cfg: ModelConfig, serve=None,
+                 max_slots: Optional[int] = None,
+                 max_seq: Optional[int] = None, compute_dtype=None,
+                 cache_dtype=None, packed: Optional[dict] = None,
+                 interpret: Optional[bool] = None,
+                 prefill_multiple: Optional[int] = None,
                  group_experts: Optional[bool] = None):
+        if isinstance(serve, int):  # legacy positional (max_slots, max_seq)
+            if max_slots is not None and max_seq is None:
+                max_seq = max_slots
+            max_slots, serve = serve, None
+        if serve is None:
+            serve = _legacy_serve_config(
+                "ContinuousEngine", max_slots, max_seq, compute_dtype,
+                cache_dtype, interpret, prefill_multiple, group_experts)
         if cfg.scan_layers:
             raise ValueError("continuous batching needs an unrolled config "
                              "(cfg.replace(scan_layers=False))")
-        if prefill_multiple != 1 and any(
-                not isinstance(cfg.layer(i).mixer, AttentionSpec)
-                for i in range(cfg.n_layers)):
+        hybrid = any(not isinstance(cfg.layer(i).mixer, AttentionSpec)
+                     for i in range(cfg.n_layers))
+        if serve.prefill_multiple != 1 and hybrid:
             # attention masks padded prefill positions via the per-slot
             # length; an SSM integrates them into its recurrent state
             raise ValueError("SSM/hybrid mixers need unpadded prefills: "
                              "pass prefill_multiple=1")
+        if serve.paged and hybrid:
+            raise ValueError("paged KV pools support attention-only "
+                             "configs (SSM state is recurrent, not "
+                             "positional)")
+        self.serve = serve
         self.params = params
         self.cfg = cfg
-        self.max_slots = max_slots
-        self.max_seq = max_seq
-        self.cache_dtype = cache_dtype
-        self.prefill_multiple = prefill_multiple
-        mlp_apply = (make_sparse_mlp_apply(packed, interpret, group_experts)
+        self.max_slots = serve.max_slots
+        self.max_seq = serve.max_seq
+        self.cache_dtype = serve.cache_dtype
+        self.prefill_multiple = serve.prefill_multiple
+        mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
+                                           serve.group_experts)
                      if packed else None)
-        self._prefill = jax.jit(
-            make_prefill_step(cfg, compute_dtype, mlp_apply))
-        decode = make_serve_step(cfg, compute_dtype, mlp_apply)
+        if serve.paged:
+            self._prefill = jax.jit(make_paged_prefill_step(
+                cfg, serve.compute_dtype, mlp_apply))
+            decode = make_paged_decode_step(cfg, serve.compute_dtype,
+                                            mlp_apply)
+            self._copy_block = jax.jit(T.copy_pool_block)
+        else:
+            self._prefill = jax.jit(make_prefill_step(
+                cfg, serve.compute_dtype, mlp_apply))
+            decode = make_serve_step(cfg, serve.compute_dtype, mlp_apply)
+            self._write = jax.jit(T.write_cache_slot)
 
         # one fused dispatch per tick: decode + sample on device, only
-        # the (max_slots,) sampled tokens come back to the host
-        def decode_sample(params, pool, tokens, lengths, key, temperature):
-            logits, pool = decode(params, pool, tokens, lengths)
-            return sample_token(logits, key, temperature, cfg.vocab), pool
-        self._decode_sample = jax.jit(decode_sample,
-                                      static_argnames=("temperature",))
-        self._write = jax.jit(T.write_cache_slot)
+        # the (max_slots,) sampled tokens come back to the host.
+        # Sampling state is *traced* — per-slot base keys, sample
+        # counts, and a per-slot temperature vector — so mixed-
+        # temperature batches never retrace the decode step.
+        def decode_sample(params, pool, tokens, lengths, bases, counts,
+                          temps, *tables):
+            logits, pool = decode(params, pool, tokens, lengths, *tables)
+            keys = jax.vmap(jax.random.fold_in)(bases, counts)
+            return sample_tokens(logits, keys, temps, cfg.vocab), pool
+        self._decode_sample = jax.jit(decode_sample)
+
+        def first_sample(logits_row, base, temp):
+            key = jax.random.fold_in(base, 0)
+            return sample_tokens(logits_row[None], key[None], temp[None],
+                                 cfg.vocab)[0]
+        self._first_sample = jax.jit(first_sample)
 
     @classmethod
-    def from_artifact(cls, artifact, max_slots: int, max_seq: int, *,
+    def from_artifact(cls, artifact, serve=None,
+                      max_seq: Optional[int] = None, *,
                       sparse: bool = True, **kw) -> "ContinuousEngine":
         """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`:
         the saved block plans are rehydrated into the jitted hot loop —
         no ``pack_model`` at startup. Expert plan stacks keep their
         saved ``group`` flag, so MoE bundles serve through the grouped
-        one-launch kernel with zero repacking."""
+        one-launch kernel with zero repacking. ``serve`` is a
+        :class:`ServeConfig` (two ints are the deprecated
+        ``max_slots, max_seq``)."""
+        if isinstance(serve, int):      # legacy (max_slots, max_seq)
+            kw["max_slots"], serve = serve, None
+        if max_seq is not None:
+            kw["max_seq"] = max_seq
         packed = artifact.packed if sparse else None
-        return cls(artifact.params, artifact.cfg, max_slots=max_slots,
-                   max_seq=max_seq, packed=packed or None, **kw)
+        return cls(artifact.params, artifact.cfg, serve,
+                   packed=packed or None, **kw)
 
     # ------------------------------------------------------------ pieces
 
@@ -99,8 +162,25 @@ class ContinuousEngine:
         m = self.prefill_multiple
         return min(-(-n // m) * m, self.max_seq)
 
-    def _prefill_slot(self, pool, slot, temperature, key):
-        """Prefill one request into its slot; returns (pool, first_token)."""
+    def _request_sampling(self, slot, state, default_temp, run_seed):
+        """Bind the request's sampling stream to its slot."""
+        req = slot.request
+        t = req.temperature if req.temperature is not None else default_temp
+        state["bases"][slot.index] = np.asarray(
+            request_key(req.seed, req.uid, run_seed))
+        state["temps"][slot.index] = t
+
+    def _sample_first(self, logits_row, slot, state):
+        """Sample the request's first token from its prefill logits."""
+        return int(self._first_sample(
+            logits_row, jnp.asarray(state["bases"][slot.index]),
+            jnp.asarray(state["temps"][slot.index], jnp.float32)))
+
+    # ----------------------------------------------------------- prefill
+
+    def _prefill_slot(self, pool, slot, state):
+        """Contiguous pool: prefill one request into its slot; returns
+        (pool, first_token)."""
         prompt = np.asarray(slot.request.prompt, np.int32)
         s0 = len(prompt)
         bucket = self._bucket(s0)
@@ -109,9 +189,29 @@ class ContinuousEngine:
         row = T.init_cache(self.cfg, 1, self.max_seq, self.cache_dtype)
         logits, row = self._prefill(self.params, jnp.asarray(padded), row)
         pool = self._write(pool, row, jnp.int32(slot.index))
-        tok = sample_token(logits[:, s0 - 1, :], key, temperature,
-                           self.cfg.vocab)
-        return pool, int(tok[0])
+        return pool, self._sample_first(logits[0, s0 - 1, :], slot, state)
+
+    def _prefill_chunk(self, pool, slot, tables, state):
+        """Paged pool: feed the next chunk of the request's prompt in;
+        returns (pool, first_token_or_None)."""
+        serve = self.serve
+        prompt = slot.request.prompt
+        s0 = len(prompt)
+        start = slot.prefilled
+        chunk = serve.prefill_chunk or (s0 - start)
+        end = min(start + chunk, s0)
+        n = end - start
+        bucket = self._bucket(n)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :n] = prompt[start:end]
+        logits, pool = self._prefill(
+            self.params, pool, jnp.asarray(padded),
+            jnp.asarray(tables[slot.index:slot.index + 1]),
+            jnp.asarray([start], jnp.int32), jnp.asarray([n], jnp.int32))
+        slot.prefilled = end
+        if end < s0:
+            return pool, None
+        return pool, self._sample_first(logits[0, n - 1, :], slot, state)
 
     # -------------------------------------------------------------- run
 
@@ -124,6 +224,11 @@ class ContinuousEngine:
         ``(finished, stats)`` where ``finished`` is uid-sorted
         ``scheduler.Finished`` records.
 
+        ``temperature`` and ``seed`` are *defaults* for requests that
+        don't carry their own ``Request.temperature`` / ``Request.seed``
+        — sampling knobs are per-request, and a request with its own
+        seed samples the same stream regardless of batch composition.
+
         Decode runs in bursts of up to ``max_burst`` ticks that chain
         the sampled tokens on-device, so the hot loop stays async and
         only syncs with the host scheduler once per burst. Bursts never
@@ -135,64 +240,246 @@ class ContinuousEngine:
         sched = Scheduler(self.max_slots, self.max_seq)
         for r in requests:
             sched.submit(r)
-        pool = T.init_cache_pool(self.cfg, self.max_slots, self.max_seq,
-                                 self.cache_dtype)
-        key = jax.random.PRNGKey(seed)
-        t0 = time.perf_counter()
-        clock = lambda: time.perf_counter() - t0  # noqa: E731
-        ticks = prefills = 0
-        util = []
+        state = {
+            "bases": np.zeros((self.max_slots, 2), np.uint32),
+            "temps": np.zeros((self.max_slots,), np.float32),
+            "default_temp": float(temperature), "run_seed": int(seed),
+        }
+        if self.serve.paged:
+            return self._run_paged(sched, state, max_ticks, max_burst)
+        return self._run_contiguous(sched, state, max_ticks, max_burst)
+
+    def _decode_burst(self, sched, pool, state, tick_state, max_ticks,
+                      max_burst, tables=None):
+        """One decode burst over the active slots (both backends);
+        returns the updated pool, or None when there is nothing to
+        decode."""
+        active = sched.active()
+        if not active:
+            return None
         tokens_in = np.zeros((self.max_slots, 1), np.int32)
         lengths = np.zeros((self.max_slots,), np.int32)
+        counts = np.zeros((self.max_slots,), np.int32)
+        for s in active:
+            tokens_in[s.index, 0] = s.last_token
+            lengths[s.index] = s.length
+            counts[s.index] = len(s.generated)
+        remaining = min(
+            min(s.request.max_new_tokens - len(s.generated),
+                self.max_seq - s.length) for s in active)
+        burst = max(1, min(max_burst, remaining))
+        if max_ticks is not None:
+            burst = min(burst, max_ticks - tick_state["ticks"])
+        extra = ((jnp.asarray(tables),) if tables is not None else ())
+        toks_dev = jnp.asarray(tokens_in)
+        lens_dev = jnp.asarray(lengths)
+        counts_dev = jnp.asarray(counts)
+        bases_dev = jnp.asarray(state["bases"])
+        temps_dev = jnp.asarray(state["temps"])
+        steps = []
+        for _ in range(burst):
+            sampled, pool = self._decode_sample(
+                self.params, pool, toks_dev, lens_dev, bases_dev,
+                counts_dev, temps_dev, *extra)
+            steps.append(sampled)
+            toks_dev = sampled[:, None]
+            lens_dev = lens_dev + 1
+            counts_dev = counts_dev + 1
+        host = np.asarray(jnp.stack(steps))    # one sync per burst
+        for k in range(burst):
+            sched.decoded({s.index: host[k, s.index] for s in active},
+                          tick_state["clock"]())
+            tick_state["util"].append(len(active) / self.max_slots)
+            tick_state["ticks"] += 1
+        return pool
+
+    def _stats(self, sched, tick_state, wall, prefills, chunks):
+        finished = sorted(sched.finished, key=lambda f: f.request.uid)
+        n_tok = sum(len(f.tokens) for f in finished)
+        shared = sum(f.prompt_blocks_shared for f in finished)
+        shareable = 0
+        if self.serve.paged:
+            bs = self.serve.block_size
+            shareable = sum((len(f.request.prompt) - 1) // bs
+                            for f in finished
+                            if f.request.prefix_id is not None)
+        util = tick_state["util"]
+        return finished, ServeStats(
+            ticks=tick_state["ticks"], wall_s=wall,
+            generated_tokens=n_tok,
+            tokens_per_s=n_tok / wall if wall > 0 else 0.0,
+            slot_utilization=float(np.mean(util)) if util else 0.0,
+            prefills=prefills, rejected=len(sched.rejected),
+            prefill_chunks=chunks,
+            peak_concurrency=tick_state["peak"],
+            prompt_blocks_shared=shared,
+            prefix_hit_rate=shared / shareable if shareable else 0.0)
+
+    # ------------------------------------------------- contiguous backend
+
+    def _run_contiguous(self, sched, state, max_ticks, max_burst):
+        pool = T.init_cache_pool(self.cfg, self.max_slots, self.max_seq,
+                                 self.cache_dtype)
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0  # noqa: E731
+        tick_state = {"ticks": 0, "util": [], "peak": 0, "clock": clock}
+        prefills = 0
 
         while sched.has_work():
-            if max_ticks is not None and ticks >= max_ticks:
+            if max_ticks is not None and tick_state["ticks"] >= max_ticks:
                 break
             for slot in sched.admissions(clock()):
-                key, sub = jax.random.split(key)
-                pool, tok = self._prefill_slot(pool, slot, temperature, sub)
+                self._request_sampling(slot, state, state["default_temp"],
+                                       state["run_seed"])
+                pool, tok = self._prefill_slot(pool, slot, state)
                 prefills += 1
                 sched.started(slot, tok, clock())
-            active = sched.active()
-            if not active:
+            tick_state["peak"] = max(tick_state["peak"],
+                                     sched.concurrency())
+            new_pool = self._decode_burst(sched, pool, state, tick_state,
+                                          max_ticks, max_burst)
+            if new_pool is None:
                 if sched.queue:     # all arrivals are in the future
                     time.sleep(max(sched.queue[0].arrival - clock(), 0.0))
                 continue
-            for s in active:
-                tokens_in[s.index, 0] = s.last_token
-                lengths[s.index] = s.length
-            remaining = min(
-                min(s.request.max_new_tokens - len(s.generated),
-                    self.max_seq - s.length) for s in active)
-            burst = max(1, min(max_burst, remaining))
-            if max_ticks is not None:
-                burst = min(burst, max_ticks - ticks)
-            toks_dev = jnp.asarray(tokens_in)
-            lens_dev = jnp.asarray(lengths)
-            steps = []
-            for _ in range(burst):
-                key, sub = jax.random.split(key)
-                sampled, pool = self._decode_sample(
-                    self.params, pool, toks_dev, lens_dev, sub, temperature)
-                steps.append(sampled)
-                toks_dev = sampled[:, None]
-                lens_dev = lens_dev + 1
-            host = np.asarray(jnp.stack(steps))    # one sync per burst
-            for k in range(burst):
-                sched.decoded({s.index: host[k, s.index] for s in active},
-                              clock())
-                util.append(len(active) / self.max_slots)
-                ticks += 1
+            pool = new_pool
 
-        wall = clock()
-        finished = sorted(sched.finished, key=lambda f: f.request.uid)
-        n_tok = sum(len(f.tokens) for f in finished)
-        stats = ServeStats(
-            ticks=ticks, wall_s=wall, generated_tokens=n_tok,
-            tokens_per_s=n_tok / wall if wall > 0 else 0.0,
-            slot_utilization=float(np.mean(util)) if util else 0.0,
-            prefills=prefills, rejected=len(sched.rejected))
-        return finished, stats
+        return self._stats(sched, tick_state, clock(), prefills, prefills)
+
+    # ------------------------------------------------------ paged backend
+
+    def _blocks_for(self, req, prefix: PrefixCache) -> int:
+        """Blocks a request must *own*: enough for every KV position it
+        can write (prompt + budget, capped at max_seq), minus blocks a
+        prefix-cache hit would map in. Reserved in full at admission, so
+        decode never runs out of blocks mid-request."""
+        bs = self.serve.block_size
+        cap = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+        shared = len(prefix.match(req.prefix_id, req.prompt))
+        return -(-cap // bs) - shared
+
+    def _run_paged(self, sched, state, max_ticks, max_burst):
+        serve = self.serve
+        bs = serve.block_size
+        alloc = BlockAllocator(serve.arena_blocks, bs)
+        prefix = PrefixCache(alloc)
+        pool = T.init_paged_pool(self.cfg, serve.arena_blocks, bs,
+                                 self.cache_dtype)
+        tables = np.full((self.max_slots, serve.blocks_per_seq),
+                         alloc.scratch, np.int32)
+        slot_blocks: dict[int, list] = {}
+        t0 = time.perf_counter()
+        clock = lambda: time.perf_counter() - t0  # noqa: E731
+        tick_state = {"ticks": 0, "util": [], "peak": 0, "clock": clock}
+        prefills = chunks = 0
+
+        # blocks are *reserved* inside the admission gate — several
+        # requests can be admitted in one scheduler call, so checking
+        # n_free without claiming would over-admit against the same
+        # free blocks
+        pending: dict[int, tuple] = {}      # uid -> (shared, owned)
+
+        def can_admit(req):
+            if req.uid in pending:
+                return True
+            shared = prefix.match(req.prefix_id, req.prompt)
+            need = self._blocks_for(req, prefix)
+            if need > alloc.n_free:
+                return False
+            if shared:
+                alloc.retain(shared)
+            pending[req.uid] = (list(shared), alloc.alloc(need))
+            return True
+
+        def release_if_finished(slot):
+            if (slot.index not in sched.slots
+                    and slot.index not in sched.prefilling):
+                blocks = slot_blocks.pop(slot.index, None)
+                if blocks:
+                    alloc.release(blocks)
+                tables[slot.index, :] = alloc.scratch
+
+        while sched.has_work():
+            if max_ticks is not None and tick_state["ticks"] >= max_ticks:
+                break
+
+            # ---- admissions: map shared prefix blocks + claim the rest
+            admitted = sched.admissions(clock(), can_admit)
+            if (not admitted and not sched.slots and not sched.prefilling
+                    and sched.queue
+                    and sched.queue[0].arrival <= clock()):
+                # head blocked with the pool idle: cached prefixes are
+                # the only block holders — drop them and retry; a head
+                # that still doesn't fit can never run
+                if len(prefix):
+                    prefix.drop_all()
+                    admitted = sched.admissions(clock(), can_admit)
+                if not admitted and not can_admit(sched.queue[0]):
+                    sched.rejected.append(sched.queue.popleft())
+                    continue
+            for slot in admitted:
+                req = slot.request
+                shared, owned = pending.pop(req.uid)
+                row = shared + owned
+                tables[slot.index, :] = alloc.scratch
+                tables[slot.index, :len(row)] = row
+                slot_blocks[slot.index] = row
+                slot.shared_blocks = len(shared)
+                slot.prefilled = len(shared) * bs
+                self._request_sampling(slot, state,
+                                       state["default_temp"],
+                                       state["run_seed"])
+            for shared, owned in pending.values():  # reserved, not admitted
+                if shared:
+                    alloc.release(shared)
+                alloc.release(owned)
+            pending.clear()
+            tick_state["peak"] = max(tick_state["peak"],
+                                     sched.concurrency())
+
+            # ---- chunked prefill: one chunk per prefilling slot per
+            # tick, interleaved with the decode burst below
+            for slot in list(sched.prefilling.values()):
+                pool, tok = self._prefill_chunk(pool, slot, tables, state)
+                chunks += 1
+                if tok is not None:
+                    prefills += 1
+                    sched.started(slot, tok, clock())
+                    prefix.register(slot.request.prefix_id,
+                                    slot.request.prompt,
+                                    tables[slot.index])
+                    release_if_finished(slot)
+
+            # ---- copy-on-write guard: a decode write may never land in
+            # a block another sequence can still read
+            active = sched.active()
+            for s in active:
+                pool = alloc.ensure_writable(tables[s.index],
+                                             s.length // bs, pool)
+
+            # the decode step runs over *every* slot row; slots still
+            # mid-chunked-prefill must not have their real blocks
+            # stomped by the inactive-row write at position 0, so their
+            # table rows are masked to the scratch block for the burst
+            decode_tables = tables
+            if sched.prefilling:
+                decode_tables = tables.copy()
+                decode_tables[list(sched.prefilling)] = alloc.scratch
+            new_pool = self._decode_burst(sched, pool, state, tick_state,
+                                          max_ticks, max_burst,
+                                          tables=decode_tables)
+            if new_pool is None:
+                if not sched.prefilling and sched.queue:
+                    delay = sched.queue[0].arrival - clock()
+                    if delay > 0:   # all arrivals are in the future
+                        time.sleep(delay)
+                continue
+            pool = new_pool
+            for s in active:
+                release_if_finished(s)
+
+        prefix.drop_all()
+        return self._stats(sched, tick_state, clock(), prefills, chunks)
 
 
 def latency_percentiles(finished: list[Finished], p=(50, 99)) -> dict:

@@ -7,9 +7,15 @@ Both step factories accept an optional ``mlp_apply`` override so a
 Mosaic-pruned model's feed-forward runs through the Pallas block-sparse
 kernel (``repro.serve.sparse``) in the serving hot loop. The
 continuous-batching engine lives in ``repro.serve.batching``.
+
+Engines are constructed from a single frozen
+:class:`~repro.serve.config.ServeConfig` — the same shape for the
+static and continuous engines, in-memory and ``from_artifact``. The
+pre-ServeConfig kwarg constructors still work as deprecation shims.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.models import transformer as T
 from repro.models.specs import ModelConfig
+from repro.serve.config import ServeConfig
 
 
 def make_sparse_mlp_apply(packed: dict, interpret: bool = True,
@@ -70,6 +77,57 @@ def sample_token(logits: jax.Array, key, temperature: float = 0.0,
                                   ).astype(jnp.int32)
 
 
+def sample_tokens(logits: jax.Array, keys: jax.Array, temps: jax.Array,
+                  vocab: Optional[int] = None) -> jax.Array:
+    """Per-row sampling with *traced* per-row temperatures and keys.
+
+    logits: (B, V); keys: (B, 2) uint32 PRNG keys; temps: (B,) float32.
+    Rows with ``temps <= 0`` are greedy (argmax); positive rows sample
+    their own categorical stream. Because temperature is a traced
+    vector — not a static argument — mixed-temperature batches never
+    retrace the decode step.
+    """
+    if vocab is not None and vocab < logits.shape[-1]:
+        mask = jnp.arange(logits.shape[-1]) >= vocab
+        logits = jnp.where(mask, -1e30, logits)
+    # branch-free on purpose: a lax.cond here stalls XLA CPU's async
+    # dispatch pipeline and serializes the whole decode burst (~10x)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(temps > 0, temps, 1.0).astype(logits.dtype)
+    drawn = jax.vmap(jax.random.categorical)(keys, logits / safe_t[:, None])
+    return jnp.where(temps > 0, drawn.astype(jnp.int32), greedy)
+
+
+def request_key(seed: Optional[int], uid: int, run_seed: int) -> jax.Array:
+    """The request's base sampling key: its own ``seed`` when set (the
+    stream is then independent of batch composition and reproducible
+    across runs), else a per-uid fold of the engine-run seed."""
+    if seed is not None:
+        return jax.random.PRNGKey(seed)
+    return jax.random.fold_in(jax.random.PRNGKey(run_seed), uid)
+
+
+def _legacy_serve_config(engine: str, max_slots, max_seq, compute_dtype,
+                         cache_dtype, interpret, prefill_multiple,
+                         group_experts) -> ServeConfig:
+    """Assemble a ServeConfig from pre-redesign kwargs (deprecated)."""
+    warnings.warn(
+        f"{engine}(..., max_seq=, compute_dtype=, ...) kwargs are "
+        "deprecated; pass a repro.serve.config.ServeConfig",
+        DeprecationWarning, stacklevel=3)
+    kw = dict(max_seq=max_seq, compute_dtype=compute_dtype,
+              cache_dtype=cache_dtype, interpret=interpret,
+              group_experts=group_experts)
+    if max_slots is not None:
+        kw["max_slots"] = max_slots
+    if prefill_multiple is not None:
+        kw["prefill_multiple"] = prefill_multiple
+    defaults = ServeConfig()
+    return ServeConfig(**{k: (v if v is not None
+                              else getattr(defaults, k))
+                          for k, v in kw.items()})
+
+
 class Engine:
     """Minimal static-batch generation engine over the functional steps.
 
@@ -77,32 +135,43 @@ class Engine:
     through the block-sparse kernel — the Mosaic fast path.
     """
 
-    def __init__(self, params, cfg: ModelConfig, max_seq: int,
-                 compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16,
-                 packed: Optional[dict] = None, interpret: bool = True,
+    def __init__(self, params, cfg: ModelConfig, serve=None,
+                 max_seq: Optional[int] = None,
+                 compute_dtype=None, cache_dtype=None,
+                 packed: Optional[dict] = None,
+                 interpret: Optional[bool] = None,
                  group_experts: Optional[bool] = None):
+        if isinstance(serve, int):      # legacy positional max_seq
+            serve, max_seq = None, serve
+        if serve is None:
+            serve = _legacy_serve_config(
+                "Engine", None, max_seq, compute_dtype, cache_dtype,
+                interpret, None, group_experts)
+        self.serve = serve
         self.params = params
         self.cfg = cfg
-        self.max_seq = max_seq
-        self.cache_dtype = cache_dtype
-        mlp_apply = (make_sparse_mlp_apply(packed, interpret, group_experts)
+        self.max_seq = serve.max_seq
+        self.cache_dtype = serve.cache_dtype
+        mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
+                                           serve.group_experts)
                      if packed else None)
         self.prefill_step = jax.jit(
-            make_prefill_step(cfg, compute_dtype, mlp_apply))
+            make_prefill_step(cfg, serve.compute_dtype, mlp_apply))
         self.serve_step = jax.jit(
-            make_serve_step(cfg, compute_dtype, mlp_apply))
+            make_serve_step(cfg, serve.compute_dtype, mlp_apply))
 
     @classmethod
-    def from_artifact(cls, artifact, max_seq: int, *, sparse: bool = True,
+    def from_artifact(cls, artifact, serve=None, *, sparse: bool = True,
                       **kw) -> "Engine":
         """Serve a loaded :class:`~repro.core.artifact.PrunedArtifact`
         directly: params, pruned config, and (with ``sparse=True``) the
         saved block plans — no ``pack_model`` at startup. Rehydrated
         expert plan stacks keep their saved ``group`` flag, so MoE
         bundles packed for the grouped kernel serve through the
-        one-launch path with zero repacking."""
+        one-launch path with zero repacking. ``serve`` is a
+        :class:`ServeConfig` (an int is the deprecated ``max_seq``)."""
         packed = artifact.packed if sparse else None
-        return cls(artifact.params, artifact.cfg, max_seq=max_seq,
+        return cls(artifact.params, artifact.cfg, serve,
                    packed=packed or None, **kw)
 
     def generate(self, prompt_tokens, n_new: int, temperature: float = 0.0,

@@ -1,11 +1,14 @@
 """Request scheduler for the continuous-batching engine.
 
 FIFO admission into a fixed pool of KV-cache slots: a request waits in
-the arrival queue until a slot frees, is prefilled into that slot, then
-decodes one token per engine tick alongside every other active slot.
-Finished sequences (EOS / per-request token budget / cache full) release
-their slot immediately, so requests of different lengths flow through
-the batch without ever recompiling the decode step.
+the arrival queue until a slot frees (and, on the paged pool, until the
+block allocator can cover it — admission backpressure), moves to the
+``prefilling`` state while its prompt enters the cache (possibly one
+chunk per tick, interleaved with decode), then decodes one token per
+engine tick alongside every other active slot. Finished sequences
+(EOS / per-request token budget / cache full) release their slot
+immediately, so requests of different lengths flow through the batch
+without ever recompiling the decode step.
 
 Pure host-side bookkeeping — no jax in this module. The engine
 (``repro.serve.batching``) owns the device arrays and calls
@@ -21,12 +24,23 @@ from typing import Optional
 @dataclasses.dataclass
 class Request:
     """One generation request. ``arrival`` is seconds on the engine's
-    workload clock (0 = available immediately)."""
+    workload clock (0 = available immediately).
+
+    ``prefix_id`` is deepsparse-session-style cache identity: requests
+    sharing a ``prefix_id`` (and the prompt tokens under it) share the
+    prompt prefix's KV blocks on the paged pool. Sampling knobs ride on
+    the request — ``temperature``/``seed`` of ``None`` fall back to the
+    engine-run defaults — so mixed-temperature batches decode in one
+    jitted step.
+    """
     uid: int
     prompt: list
     max_new_tokens: int
     eos_id: Optional[int] = None
     arrival: float = 0.0
+    prefix_id: Optional[str] = None
+    temperature: Optional[float] = None
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -39,6 +53,9 @@ class Slot:
     generated: list = dataclasses.field(default_factory=list)
     admitted_at: float = 0.0
     first_token_at: float = 0.0
+    prefilled: int = 0          # prompt tokens already in the cache
+    #                             (starts > 0 on a shared prefix)
+    shared_blocks: int = 0      # prompt blocks mapped from a prefix hit
 
 
 @dataclasses.dataclass
@@ -49,6 +66,7 @@ class Finished:
     admitted_at: float
     first_token_at: float
     finished_at: float
+    prompt_blocks_shared: int = 0   # paged: prefix-cache block hits
 
 
 class Scheduler:
@@ -56,7 +74,8 @@ class Scheduler:
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.queue: deque[Request] = deque()
-        self.slots: dict[int, Slot] = {}            # index -> active slot
+        self.prefilling: dict[int, Slot] = {}       # index -> admitted slot
+        self.slots: dict[int, Slot] = {}            # index -> decoding slot
         self.free: list[int] = list(range(max_slots - 1, -1, -1))
         self.finished: list[Finished] = []
         self.rejected: list[Request] = []
@@ -69,14 +88,20 @@ class Scheduler:
         else:
             self.queue.append(request)
 
-    def admissions(self, now: float = 0.0) -> list[Slot]:
-        """Pop arrived FIFO requests into free slots; the engine prefills
-        each returned ``Slot`` and then calls ``started``."""
+    def admissions(self, now: float = 0.0, can_admit=None) -> list[Slot]:
+        """Pop arrived FIFO requests into free slots; each returned
+        ``Slot`` enters the ``prefilling`` state — the engine feeds its
+        prompt into the cache (in one shot or chunk by chunk) and then
+        calls ``started``. ``can_admit(request)`` is the engine's
+        resource gate (paged-pool block availability); a False holds the
+        queue head — FIFO backpressure, no reordering."""
         out = []
         while self.free and self.queue and self.queue[0].arrival <= now:
+            if can_admit is not None and not can_admit(self.queue[0]):
+                break
             req = self.queue.popleft()
             slot = Slot(index=self.free.pop(), request=req, admitted_at=now)
-            self.slots[slot.index] = slot
+            self.prefilling[slot.index] = slot
             out.append(slot)
         return out
 
@@ -84,7 +109,10 @@ class Scheduler:
 
     def started(self, slot: Slot, first_token: int, now: float = 0.0) -> None:
         """Prefill done: prompt is in the cache, first token sampled."""
+        self.prefilling.pop(slot.index, None)
+        self.slots[slot.index] = slot
         slot.length = len(slot.request.prompt)
+        slot.prefilled = slot.length
         slot.last_token = int(first_token)
         slot.generated = [int(first_token)]
         slot.first_token_at = now
@@ -116,7 +144,7 @@ class Scheduler:
         self.finished.append(Finished(
             request=req, tokens=slot.generated, reason=reason,
             admitted_at=slot.admitted_at, first_token_at=slot.first_token_at,
-            finished_at=now))
+            finished_at=now, prompt_blocks_shared=slot.shared_blocks))
         del self.slots[slot.index]
         self.free.append(slot.index)
 
@@ -126,7 +154,11 @@ class Scheduler:
         return sorted(self.slots.values(), key=lambda s: s.index)
 
     def has_work(self) -> bool:
-        return bool(self.slots or self.queue)
+        return bool(self.slots or self.prefilling or self.queue)
 
     def utilization(self) -> float:
         return len(self.slots) / self.max_slots
+
+    def concurrency(self) -> int:
+        """Sequences currently holding cache resources."""
+        return len(self.slots) + len(self.prefilling)

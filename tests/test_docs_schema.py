@@ -1,5 +1,6 @@
 """docs/ ↔ code sync: the recipe schema reference must name every
-dataclass field and every registered plug-in, so the doc cannot rot as
+dataclass field and every registered plug-in, and the serving guide
+must name every ServeConfig field, so the docs cannot rot as
 fields/selectors/categories/stages are added; README + docs internal
 links must resolve."""
 import dataclasses
@@ -12,9 +13,11 @@ from repro.core import pipeline  # noqa: F401 (registers stages)
 from repro.core.recipe import GRANULARITIES, CalibrationSpec, PruneRecipe
 from repro.core.registry import CATEGORIES, SELECTORS, STAGES
 from repro.core.sweep import GridSpec
+from repro.serve.config import ServeConfig
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEMA_DOC = os.path.join(REPO, "docs", "recipe-schema.md")
+SERVING_DOC = os.path.join(REPO, "docs", "serving.md")
 
 
 @pytest.fixture(scope="module")
@@ -25,7 +28,10 @@ def schema_text():
 
 
 def _codes(text):
-    """All `inline code` spans — fields/names must appear as code."""
+    """All `inline code` spans — fields/names must appear as code.
+    Fenced ``` blocks are stripped first: a fence's backticks would
+    otherwise pair up with inline spans and swallow them."""
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
     return set(re.findall(r"`([^`]+)`", text))
 
 
@@ -36,6 +42,19 @@ def test_every_dataclass_field_documented(schema_text, cls):
                if f.name not in codes]
     assert not missing, (f"{cls.__name__} fields missing from "
                          f"docs/recipe-schema.md: {missing}")
+
+
+def test_every_serveconfig_field_documented():
+    """docs/serving.md is the ServeConfig reference: every dataclass
+    field must appear as inline code, so the serving guide cannot rot
+    as serving knobs are added."""
+    assert os.path.exists(SERVING_DOC), "docs/serving.md is missing"
+    with open(SERVING_DOC) as f:
+        codes = _codes(f.read())
+    missing = [f.name for f in dataclasses.fields(ServeConfig)
+               if f.name not in codes]
+    assert not missing, (f"ServeConfig fields missing from "
+                         f"docs/serving.md: {missing}")
 
 
 def test_every_registry_name_documented(schema_text):
