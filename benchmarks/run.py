@@ -156,7 +156,9 @@ def _derive(name: str, result) -> str:
                     f";flops_skipped={result['flops_skipped']:.2f}"
                     f";paged_concurrency="
                     f"{result['paged_concurrency_vs_contiguous']:.2f}x"
-                    f";prefix_hit_rate={result['prefix_hit_rate']:.2f}")
+                    f";prefix_hit_rate={result['prefix_hit_rate']:.2f}"
+                    f";slo_vs_fifo_attainment="
+                    f"{result['slo_vs_fifo_attainment']:.2f}x")
         if name == "prune_pipeline":
             return ";".join(f"{r['arch']}={r['seconds']:.1f}s"
                             for r in result)
@@ -197,9 +199,16 @@ def _metrics(name: str, result, us: float) -> dict:
                           result["paged_concurrency_vs_contiguous"],
                       "paged_vs_contiguous_tokens":
                           result["paged_vs_contiguous_tokens"],
-                      "prefix_hit_rate": result["prefix_hit_rate"]})
+                      "prefix_hit_rate": result["prefix_hit_rate"],
+                      "fifo_attainment": result["fifo_attainment"],
+                      "slo_attainment": result["slo_attainment"],
+                      "slo_vs_fifo_attainment":
+                          result["slo_vs_fifo_attainment"]})
             for r in result["rows"]:
                 m[f"{r['engine']}_tokens_per_s"] = r["tokens_per_s"]
+            for r in result["policy_rows"]:
+                m[f"{r['policy']}_queue_p99_ms"] = r["queue_p99"]
+                m[f"{r['policy']}_total_p99_ms"] = r["p99"]
         elif name == "prune_pipeline":
             for r in result:
                 m[f"{r['arch']}_prune_seconds"] = r["seconds"]

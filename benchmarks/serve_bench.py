@@ -28,6 +28,14 @@ concurrent requests; the paged pool maps the shared prefix blocks once
 several times more concurrent requests — reported as
 ``paged_concurrency_vs_contiguous`` alongside the prefix-block hit rate,
 with outputs asserted token-identical.
+
+The third section is the scheduler-policy shoot-out: one mixed-priority
+burst workload (the latency-sensitive cohort arrives *last*) served
+under ``fifo`` / ``priority`` / ``slo`` admission, reporting per-policy
+p50/p99 queue and total latency plus SLO attainment. Deadlines are
+calibrated from fifo's measured wall clock, so
+``slo_vs_fifo_attainment`` is machine-speed-free and gated >= 1 in
+``baseline.json`` (EDF must never attain less than arrival order).
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ from repro.models.specs import AttentionSpec, LayerSpec, MLPSpec, ModelConfig
 from repro.serve.batching import ContinuousEngine, latency_percentiles
 from repro.serve.config import ServeConfig
 from repro.serve.engine import Engine
+from repro.serve.metrics import queue_percentiles, slo_attainment
 from repro.serve.scheduler import Request
 from repro.serve.sparse import flop_savings, pack_model
 
@@ -109,6 +118,28 @@ def make_shared_workload(corpus, n_requests: int, seed: int = 1,
     return reqs
 
 
+def make_priority_workload(corpus, n_requests: int, seed: int = 2,
+                           prompt_range=(8, 25), new_tokens: int = 8,
+                           deadline_ms=None):
+    """Mixed-priority burst workload: every request arrives at t=0, the
+    *last* ``n_requests // 2`` submissions are the latency-sensitive
+    cohort (priority 1, and — once calibrated — a deadline). FIFO
+    serves them last because they arrived last; the ``priority`` and
+    ``slo`` policies pull them forward. ``deadline_ms`` of None builds
+    the calibration pass (no deadlines to miss)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        urgent = i >= n_requests // 2
+        s0 = int(rng.integers(*prompt_range))
+        prompt = corpus.batch(100 + i, 1, s0)[0, :s0].tolist()
+        reqs.append(Request(
+            uid=i, prompt=prompt, max_new_tokens=new_tokens, arrival=0.0,
+            priority=1 if urgent else 0,
+            deadline_ms=deadline_ms if urgent else None))
+    return reqs
+
+
 def run_static(eng, reqs, max_slots: int):
     """FIFO fixed batches through the static Engine (arrivals ignored —
     a strictly generous baseline)."""
@@ -142,9 +173,12 @@ def run_static(eng, reqs, max_slots: int):
 def run_continuous(eng, reqs):
     finished, stats = eng.run(reqs)
     lat = latency_percentiles(finished)
+    queue = queue_percentiles(finished)
     return {"tokens": stats.generated_tokens, "wall_s": stats.wall_s,
             "tokens_per_s": stats.tokens_per_s,
             "p50": lat["p50"], "p99": lat["p99"],
+            "queue_p50": queue["p50"], "queue_p99": queue["p99"],
+            "slo_attainment": slo_attainment(finished),
             "util": stats.slot_utilization,
             "peak_concurrency": stats.peak_concurrency,
             "prefix_hit_rate": stats.prefix_hit_rate,
@@ -251,11 +285,60 @@ def main(fast: bool = True):
           f"paged==contiguous outputs: {paged_agrees}")
     if not paged_agrees:
         raise AssertionError("paged serving diverged from contiguous")
+
+    # ---- scheduler policy shoot-out: the same mixed-priority burst
+    # workload through fifo / priority / slo admission. The urgent
+    # cohort *arrives last*, so fifo structurally serves it last; the
+    # deadline is calibrated from fifo's measured wall clock (0.7x), so
+    # the attainment comparison is machine-speed-free: slo (EDF) admits
+    # the deadline carriers first and meets what fifo misses.
+    n_pol = 12
+    pol_engines = {
+        pol: ContinuousEngine(params, cfg, ServeConfig(
+            max_slots=max_slots, max_seq=max_seq, scheduler=pol,
+            compute_dtype=jnp.float32, cache_dtype=jnp.float32))
+        for pol in ("fifo", "priority", "slo")}
+    warm = make_priority_workload(corpus, n_pol)
+    run_continuous(pol_engines["fifo"], warm)           # compile
+    cal = run_continuous(pol_engines["fifo"], warm)     # calibrate
+    deadline_ms = cal["wall_s"] * 1e3 * 0.7
+    pol_reqs = make_priority_workload(corpus, n_pol,
+                                      deadline_ms=deadline_ms)
+    pol_rows = []
+    for pol, eng in pol_engines.items():
+        run_continuous(eng, pol_reqs)                   # warm-up
+        runs = [run_continuous(eng, pol_reqs) for _ in range(3)]
+        runs.sort(key=lambda r: r["slo_attainment"])
+        r = runs[1]
+        pol_outputs = r.pop("outputs")
+        assert set(pol_outputs) == set(range(n_pol)), \
+            f"{pol} dropped requests"
+        r["policy"] = pol
+        pol_rows.append(r)
+    fifo_att = pol_rows[0]["slo_attainment"]
+    slo_att = pol_rows[2]["slo_attainment"]
+    att_ratio = (slo_att + 1e-6) / (fifo_att + 1e-6)
+
+    print(f"\npolicy workload: {n_pol} burst requests, urgent half "
+          f"arrives last (priority 1, deadline {deadline_ms:.0f}ms), "
+          f"{max_slots} slots")
+    print(f"{'policy':10s} {'q_p50ms':>8s} {'q_p99ms':>8s} {'p50ms':>8s} "
+          f"{'p99ms':>8s} {'slo_att':>8s}")
+    for r in pol_rows:
+        print(f"{r['policy']:10s} {r['queue_p50']:8.0f} "
+              f"{r['queue_p99']:8.0f} {r['p50']:8.0f} {r['p99']:8.0f} "
+              f"{r['slo_attainment']:8.2f}")
+    print(f"slo vs fifo attainment: {att_ratio:.2f}x "
+          f"({slo_att:.2f} vs {fifo_att:.2f})")
+
     return {"rows": rows, "speedup": speedup, "sparse_agrees": agree,
             "flops_skipped": skip, "paged_agrees": paged_agrees,
             "paged_concurrency_vs_contiguous": conc_ratio,
             "paged_vs_contiguous_tokens": tok_ratio,
-            "prefix_hit_rate": paged_row["prefix_hit_rate"]}
+            "prefix_hit_rate": paged_row["prefix_hit_rate"],
+            "policy_rows": pol_rows,
+            "fifo_attainment": fifo_att, "slo_attainment": slo_att,
+            "slo_vs_fifo_attainment": att_ratio}
 
 
 if __name__ == "__main__":

@@ -9,6 +9,13 @@ category -> pack -> report, and saves a deployment-ready PrunedArtifact.
   PYTHONPATH=src python -m repro.launch.prune --arch gemma-2b --smoke \
       --p 0.6 --category composite --out results/pruned_gemma
 
+  # or target a deployment platform: a bare --platform loads the
+  # checked-in preset recipe (recipes/cloud.json | edge.json |
+  # mobile.json) whose category defers to PC step 9's memory-driven
+  # selection for that platform; --p overrides the preset's target
+  PYTHONPATH=src python -m repro.launch.prune --smoke --platform edge \
+      --out results/pruned_edge
+
 The saved artifact directory is everything ``launch/serve.py
 --artifact`` needs: pruned params, pruned config, block plans, recipe,
 and report.json (incl. ``prune_seconds`` — the paper's model-production
@@ -19,6 +26,7 @@ from __future__ import annotations
 import argparse
 import json
 import logging
+import pathlib
 
 import jax
 
@@ -36,8 +44,20 @@ def recipe_from_args(args: argparse.Namespace) -> PruneRecipe:
         if args.p is not None:
             recipe = recipe.replace(p=args.p)
         return recipe
+    if args.platform:
+        # a bare --platform resolves the checked-in preset recipe for
+        # that deployment target (recipes/<platform>.json); explicit
+        # --recipe wins, and --p still overrides the preset's target
+        preset = pathlib.Path(__file__).parents[3] / "recipes" \
+            / f"{args.platform}.json"
+        if preset.is_file():
+            recipe = PruneRecipe.load(preset)
+            if args.p is not None:
+                recipe = recipe.replace(p=args.p)
+            return recipe
     if args.p is None:
-        raise SystemExit("either --recipe or --p is required")
+        raise SystemExit("either --recipe, --platform (with a preset in "
+                         "recipes/), or --p is required")
     return PruneRecipe(
         arch=args.arch, p=args.p, category=args.category,
         granularity=args.granularity, selector=args.selector,

@@ -27,6 +27,17 @@ by giving every request one common system prompt under a shared
 
   PYTHONPATH=src python -m repro.launch.serve --smoke --engine \
       continuous --block-size 16 --prefill-chunk 16 --shared-prefix
+
+``--gateway`` starts the HTTP front door instead of running a canned
+workload: ``POST /generate`` streams ndjson tokens, ``GET /metrics`` /
+``GET /healthz`` expose the engine's observability (see
+``docs/serving.md``). ``--scheduler`` picks the admission policy
+(fifo | priority | slo) and ``--memory-budget`` sizes the slot/block
+pools from the artifact's ``report.json`` instead of ``--max-slots``:
+
+  PYTHONPATH=src python -m repro.launch.serve --smoke \
+      --artifact results/pruned --sparse --gateway --port 8080 \
+      --block-size 16 --scheduler slo
 """
 from __future__ import annotations
 
@@ -106,6 +117,65 @@ def _load_or_prune(args) -> tuple:
     return params, cfg, packed, "dense"
 
 
+def _run_gateway(args, params, cfg, packed) -> None:
+    """Serve the HTTP front door until interrupted."""
+    import asyncio
+    import dataclasses
+
+    from repro.serve.gateway import Gateway, plan_placement
+
+    group = False if args.no_group_experts else None
+    max_seq = args.prompt_len + args.new_tokens
+    if args.block_size:
+        max_seq = -(-max_seq // args.block_size) * args.block_size
+    if args.memory_budget:
+        if not args.artifact:
+            raise SystemExit("--memory-budget sizes pools from a saved "
+                             "bundle's report.json; pass --artifact")
+        place = plan_placement(args.artifact, args.memory_budget,
+                               max_seq=max_seq, block_size=args.block_size,
+                               cache_dtype=jnp.float32,
+                               scheduler=args.scheduler,
+                               prefill_chunk=args.prefill_chunk)
+        serve_cfg = dataclasses.replace(place.serve,
+                                        compute_dtype=jnp.float32,
+                                        group_experts=group)
+        print(f"placement: weights {place.weights_bytes} B "
+              f"(density {place.density:.0%}), KV "
+              f"{place.kv_token_bytes} B/token -> {place.kv_tokens} "
+              f"tokens, max_slots={serve_cfg.max_slots}"
+              + (f", n_blocks={serve_cfg.n_blocks}"
+                 if serve_cfg.paged else ""))
+    else:
+        serve_cfg = ServeConfig(max_slots=args.max_slots, max_seq=max_seq,
+                                block_size=args.block_size,
+                                n_blocks=args.n_blocks,
+                                prefill_chunk=args.prefill_chunk,
+                                compute_dtype=jnp.float32,
+                                cache_dtype=jnp.float32,
+                                group_experts=group,
+                                scheduler=args.scheduler)
+    eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
+
+    async def _serve():
+        gw = await Gateway(eng, host=args.host, port=args.port,
+                           temperature=args.temperature).start()
+        print(f"gateway listening on http://{args.host}:{gw.port} "
+              f"(scheduler={serve_cfg.scheduler}, "
+              f"{'paged' if serve_cfg.paged else 'contiguous'} pool)")
+        try:
+            await gw.serve_forever()
+        finally:
+            _, stats = await gw.close()
+            print(f"gateway stopped: {stats.generated_tokens} tokens, "
+                  f"{stats.rejected} rejected {stats.reject_reasons}")
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        pass
+
+
 def main() -> None:
     # surface INFO logs (e.g. pack_model's skipped-projection summary)
     logging.basicConfig(level=logging.INFO, format="%(message)s")
@@ -147,6 +217,19 @@ def main() -> None:
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged demo: prepend one shared system prompt "
                          "to every request under a common prefix_id")
+    ap.add_argument("--gateway", action="store_true",
+                    help="start the streaming HTTP front door instead "
+                         "of running a canned workload")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="gateway port (0 = ephemeral, printed at start)")
+    ap.add_argument("--scheduler", default="fifo",
+                    help="admission policy: fifo | priority | slo")
+    ap.add_argument("--memory-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="with --artifact: size max_slots/n_blocks from "
+                         "the bundle's report.json for this budget "
+                         "(overrides --max-slots/--n-blocks)")
     args = ap.parse_args()
 
     params, cfg, packed, source = _load_or_prune(args)
@@ -156,6 +239,10 @@ def main() -> None:
         print(f"sparse fast path: {len(packed)} plans "
               f"({source}), {flop_savings(packed):.0%} projection "
               f"FLOPs skipped")
+
+    if args.gateway:
+        _run_gateway(args, params, cfg, packed)
+        return
 
     max_seq = args.prompt_len + args.new_tokens
     group = False if args.no_group_experts else None
@@ -200,7 +287,8 @@ def main() -> None:
                             n_blocks=args.n_blocks,
                             prefill_chunk=args.prefill_chunk,
                             compute_dtype=jnp.float32,
-                            cache_dtype=jnp.float32, group_experts=group)
+                            cache_dtype=jnp.float32, group_experts=group,
+                            scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
     finished, stats = eng.run(reqs, temperature=args.temperature)
     lat = latency_percentiles(finished)

@@ -23,12 +23,24 @@ With a ``packed`` plan (``sparse.pack_model`` on a Mosaic-pruned model)
 the MLP projections run through the Pallas block-sparse kernel inside
 the same jitted steps — the pruned fast path in the serving hot loop —
 on either backend.
+
+The tick loop is driven through a small *feed* seam: ``run`` wires in a
+batch feed (all requests pre-submitted, loop exits when drained) while
+``serve_forever`` wires in a live feed pulling from a thread-safe
+submission queue and emitting per-token events — the streaming gateway
+(``repro.serve.gateway``) runs this in a background thread. Both paths
+execute the identical admission/prefill/decode code, so gateway outputs
+are token-identical to driving the engine directly. Admission *order*
+is a pluggable :mod:`~repro.serve.policies` policy selected by
+``ServeConfig.scheduler`` (``fifo`` default, behavior-preserving).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
 import time
-from typing import Optional
+from collections import Counter
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,14 +48,17 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.specs import AttentionSpec, ModelConfig
+from repro.serve import metrics as M
 from repro.serve.config import ServeConfig
 from repro.serve.engine import (_legacy_serve_config, make_prefill_step,
                                 make_serve_step, make_sparse_mlp_apply,
                                 request_key, sample_tokens)
+from repro.serve.metrics import (MetricsRegistry,  # noqa: F401 (re-export)
+                                 latency_percentiles)
 from repro.serve.paging import (BlockAllocator, PrefixCache,
                                 make_paged_decode_step,
                                 make_paged_prefill_step)
-from repro.serve.scheduler import Finished, Scheduler
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -60,6 +75,93 @@ class ServeStats:
     peak_concurrency: int = 0   # max sequences holding cache at once
     prompt_blocks_shared: int = 0   # paged: prefix-cache block hits
     prefix_hit_rate: float = 0.0    # shared / shareable prompt blocks
+    reject_reasons: dict = dataclasses.field(default_factory=dict)
+    #                           # {"prompt_too_long": n, ...}
+
+    def to_dict(self) -> dict:
+        """JSON-safe dump (the gateway's /metrics stats block)."""
+        return dataclasses.asdict(self)
+
+
+class _BatchFeed:
+    """Default feed: every request was pre-submitted by ``run``; the
+    loop exits when the scheduler drains, and idles by sleeping until
+    the next future arrival (PR 6 semantics, bitwise-preserving)."""
+
+    def pump(self, sched, now: float) -> None:
+        pass
+
+    def drained(self) -> bool:
+        return True
+
+    def wait(self, sched, clock) -> None:
+        if sched.prefilling:
+            return                      # chunked prefill still progresses
+        arrival = sched.next_arrival()
+        if arrival is not None:
+            delay = arrival - clock()
+            if delay > 0:
+                time.sleep(delay)
+
+    def emit_token(self, slot, token: int, now: float) -> None:
+        pass
+
+    def emit_finished(self, fin) -> None:
+        pass
+
+    def emit_rejected(self, rej) -> None:
+        pass
+
+
+class _QueueFeed(_BatchFeed):
+    """Live feed: requests arrive on a thread-safe ``queue.Queue`` and
+    events stream out through ``emit`` — the gateway's bridge into the
+    tick loop. ``stop`` (a ``threading.Event``) ends the loop once the
+    inbox and scheduler are both drained."""
+
+    def __init__(self, inbox: queue_mod.Queue, emit: Callable,
+                 stop=None, poll_s: float = 0.002):
+        self.inbox = inbox
+        self.emit = emit
+        self.stop = stop
+        self.poll_s = poll_s
+        self._staged: list = []
+
+    def pump(self, sched, now: float) -> None:
+        while True:
+            if self._staged:
+                req = self._staged.pop(0)
+            else:
+                try:
+                    req = self.inbox.get_nowait()
+                except queue_mod.Empty:
+                    break
+            # the submission's arrival is its intake time on the
+            # engine clock — queue-wait metrics start here
+            req.arrival = now
+            sched.submit(req)
+
+    def drained(self) -> bool:
+        return (self.stop is not None and self.stop.is_set()
+                and not self._staged and self.inbox.empty())
+
+    def wait(self, sched, clock) -> None:
+        if sched.prefilling:
+            return
+        try:        # block briefly for the next submission, don't spin
+            self._staged.append(self.inbox.get(timeout=self.poll_s))
+        except queue_mod.Empty:
+            pass
+
+    def emit_token(self, slot, token: int, now: float) -> None:
+        self.emit(("token", slot.request.uid,
+                   len(slot.generated) - 1, token))
+
+    def emit_finished(self, fin) -> None:
+        self.emit(("finished", fin))
+
+    def emit_rejected(self, rej) -> None:
+        self.emit(("rejected", rej))
 
 
 class ContinuousEngine:
@@ -104,6 +206,9 @@ class ContinuousEngine:
         self.max_seq = serve.max_seq
         self.cache_dtype = serve.cache_dtype
         self.prefill_multiple = serve.prefill_multiple
+        # per-stage observability: request latencies + tick gauges land
+        # here (host-side ring buffers; the gateway's /metrics source)
+        self.metrics = MetricsRegistry()
         mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
                                            serve.group_experts)
                      if packed else None)
@@ -215,6 +320,27 @@ class ContinuousEngine:
 
     # -------------------------------------------------------------- run
 
+    def _wire(self, sched, feed) -> None:
+        """Route scheduler lifecycle events into metrics + the feed."""
+        def on_finish(fin):
+            M.observe_finished(self.metrics, fin)
+            feed.emit_finished(fin)
+
+        def on_reject(rej):
+            self.metrics.count(f"requests.rejected.{rej.reason}")
+            feed.emit_rejected(rej)
+
+        sched.on_token = feed.emit_token
+        sched.on_finish = on_finish
+        sched.on_reject = on_reject
+
+    def _sampling_state(self, temperature: float, seed: int) -> dict:
+        return {
+            "bases": np.zeros((self.max_slots, 2), np.uint32),
+            "temps": np.zeros((self.max_slots,), np.float32),
+            "default_temp": float(temperature), "run_seed": int(seed),
+        }
+
     def run(self, requests, temperature: float = 0.0, seed: int = 0,
             max_ticks: Optional[int] = None, max_burst: int = 8):
         """Serve ``requests`` to completion.
@@ -237,17 +363,47 @@ class ContinuousEngine:
         the slot frees at the burst boundary); the generated sequences
         are identical to tick-by-tick decoding.
         """
-        sched = Scheduler(self.max_slots, self.max_seq)
+        sched = Scheduler(self.max_slots, self.max_seq,
+                          policy=self.serve.scheduler)
+        feed = _BatchFeed()
+        self._wire(sched, feed)
         for r in requests:
             sched.submit(r)
-        state = {
-            "bases": np.zeros((self.max_slots, 2), np.uint32),
-            "temps": np.zeros((self.max_slots,), np.float32),
-            "default_temp": float(temperature), "run_seed": int(seed),
-        }
+        state = self._sampling_state(temperature, seed)
         if self.serve.paged:
-            return self._run_paged(sched, state, max_ticks, max_burst)
-        return self._run_contiguous(sched, state, max_ticks, max_burst)
+            return self._run_paged(sched, state, max_ticks, max_burst, feed)
+        return self._run_contiguous(sched, state, max_ticks, max_burst,
+                                    feed)
+
+    def serve_forever(self, inbox: queue_mod.Queue, emit: Callable,
+                      *, stop, temperature: float = 0.0, seed: int = 0,
+                      max_burst: int = 8, poll_s: float = 0.002):
+        """Drive the tick loop off a live submission queue (the gateway
+        front door runs this in a background thread).
+
+        ``inbox`` is a thread-safe ``queue.Queue`` of
+        :class:`~repro.serve.scheduler.Request`; each submission's
+        ``arrival`` is stamped with its intake time on the engine
+        clock. ``emit(event)`` is called from the engine thread with
+        ``("token", uid, index, token)``, ``("finished", Finished)``
+        and ``("rejected", Rejection)`` events, in generation order per
+        request (tokens surface at burst boundaries, up to
+        ``max_burst`` at a time). ``stop`` is a ``threading.Event``:
+        once set, the loop finishes the work it has, drains the inbox,
+        and returns ``(finished, stats)`` exactly like :meth:`run`.
+
+        Admission order, sampling streams, and every jitted step are
+        shared with :meth:`run` — a request submitted here generates
+        the same tokens it would generate driving the engine directly.
+        """
+        sched = Scheduler(self.max_slots, self.max_seq,
+                          policy=self.serve.scheduler)
+        feed = _QueueFeed(inbox, emit, stop=stop, poll_s=poll_s)
+        self._wire(sched, feed)
+        state = self._sampling_state(temperature, seed)
+        if self.serve.paged:
+            return self._run_paged(sched, state, None, max_burst, feed)
+        return self._run_contiguous(sched, state, None, max_burst, feed)
 
     def _decode_burst(self, sched, pool, state, tick_state, max_ticks,
                       max_burst, tables=None):
@@ -257,6 +413,7 @@ class ContinuousEngine:
         active = sched.active()
         if not active:
             return None
+        t_burst = time.perf_counter()
         tokens_in = np.zeros((self.max_slots, 1), np.int32)
         lengths = np.zeros((self.max_slots,), np.int32)
         counts = np.zeros((self.max_slots,), np.int32)
@@ -291,6 +448,15 @@ class ContinuousEngine:
                           tick_state["clock"]())
             tick_state["util"].append(len(active) / self.max_slots)
             tick_state["ticks"] += 1
+        burst_s = time.perf_counter() - t_burst
+        m = self.metrics
+        m.observe("tick.active_slots", len(active))
+        m.observe("tick.prefill_backlog",
+                  len(sched.prefilling) + len(sched.queue))
+        if burst_s > 0:
+            m.gauge("tick.tokens_per_s", burst * len(active) / burst_s)
+        m.count("decode.ticks", burst)
+        m.count("decode.tokens", burst * len(active))
         return pool
 
     def _stats(self, sched, tick_state, wall, prefills, chunks):
@@ -313,11 +479,13 @@ class ContinuousEngine:
             prefill_chunks=chunks,
             peak_concurrency=tick_state["peak"],
             prompt_blocks_shared=shared,
-            prefix_hit_rate=shared / shareable if shareable else 0.0)
+            prefix_hit_rate=shared / shareable if shareable else 0.0,
+            reject_reasons=dict(Counter(r.reason
+                                        for r in sched.rejected)))
 
     # ------------------------------------------------- contiguous backend
 
-    def _run_contiguous(self, sched, state, max_ticks, max_burst):
+    def _run_contiguous(self, sched, state, max_ticks, max_burst, feed):
         pool = T.init_cache_pool(self.cfg, self.max_slots, self.max_seq,
                                  self.cache_dtype)
         t0 = time.perf_counter()
@@ -325,7 +493,13 @@ class ContinuousEngine:
         tick_state = {"ticks": 0, "util": [], "peak": 0, "clock": clock}
         prefills = 0
 
-        while sched.has_work():
+        while True:
+            feed.pump(sched, clock())
+            if not sched.has_work():
+                if feed.drained():
+                    break
+                feed.wait(sched, clock)
+                continue
             if max_ticks is not None and tick_state["ticks"] >= max_ticks:
                 break
             for slot in sched.admissions(clock()):
@@ -339,8 +513,7 @@ class ContinuousEngine:
             new_pool = self._decode_burst(sched, pool, state, tick_state,
                                           max_ticks, max_burst)
             if new_pool is None:
-                if sched.queue:     # all arrivals are in the future
-                    time.sleep(max(sched.queue[0].arrival - clock(), 0.0))
+                feed.wait(sched, clock)     # future arrivals / live inbox
                 continue
             pool = new_pool
 
@@ -358,7 +531,7 @@ class ContinuousEngine:
         shared = len(prefix.match(req.prefix_id, req.prompt))
         return -(-cap // bs) - shared
 
-    def _run_paged(self, sched, state, max_ticks, max_burst):
+    def _run_paged(self, sched, state, max_ticks, max_burst, feed):
         serve = self.serve
         bs = serve.block_size
         alloc = BlockAllocator(serve.arena_blocks, bs)
@@ -399,23 +572,31 @@ class ContinuousEngine:
                     alloc.release(blocks)
                 tables[slot.index, :] = alloc.scratch
 
-        while sched.has_work():
+        while True:
+            feed.pump(sched, clock())
+            if not sched.has_work():
+                if feed.drained():
+                    break
+                feed.wait(sched, clock)
+                continue
             if max_ticks is not None and tick_state["ticks"] >= max_ticks:
                 break
 
             # ---- admissions: map shared prefix blocks + claim the rest
             admitted = sched.admissions(clock(), can_admit)
             if (not admitted and not sched.slots and not sched.prefilling
-                    and sched.queue
-                    and sched.queue[0].arrival <= clock()):
+                    and sched.head(clock()) is not None):
                 # head blocked with the pool idle: cached prefixes are
                 # the only block holders — drop them and retry; a head
                 # that still doesn't fit can never run
                 if len(prefix):
                     prefix.drop_all()
                     admitted = sched.admissions(clock(), can_admit)
-                if not admitted and not can_admit(sched.queue[0]):
-                    sched.rejected.append(sched.queue.popleft())
+                head = sched.head(clock())
+                if (not admitted and head is not None
+                        and not can_admit(head)):
+                    sched.reject(sched.pop_head(), "insufficient_blocks",
+                                 clock())
                     continue
             for slot in admitted:
                 req = slot.request
@@ -438,8 +619,15 @@ class ContinuousEngine:
                                      sched.concurrency())
 
             # ---- chunked prefill: one chunk per prefilling slot per
-            # tick, interleaved with the decode burst below
-            for slot in list(sched.prefilling.values()):
+            # tick, interleaved with the decode burst below; the policy
+            # may cap chunk launches per tick while slots are decoding
+            # (the slo policy's prefill/decode interleave budget) so
+            # long-prompt admissions can't starve decode ticks
+            prefill_slots = list(sched.prefilling.values())
+            budget = sched.policy.prefill_budget(len(sched.slots))
+            if budget is not None:
+                prefill_slots = prefill_slots[:budget]
+            for slot in prefill_slots:
                 pool, tok = self._prefill_chunk(pool, slot, tables, state)
                 chunks += 1
                 if tok is not None:
@@ -465,14 +653,12 @@ class ContinuousEngine:
             if sched.prefilling:
                 decode_tables = tables.copy()
                 decode_tables[list(sched.prefilling)] = alloc.scratch
+            self.metrics.gauge("tick.free_blocks", alloc.n_free)
             new_pool = self._decode_burst(sched, pool, state, tick_state,
                                           max_ticks, max_burst,
                                           tables=decode_tables)
             if new_pool is None:
-                if not sched.prefilling and sched.queue:
-                    delay = sched.queue[0].arrival - clock()
-                    if delay > 0:   # all arrivals are in the future
-                        time.sleep(delay)
+                feed.wait(sched, clock)     # future arrivals / live inbox
                 continue
             pool = new_pool
             for s in active:
@@ -480,11 +666,3 @@ class ContinuousEngine:
 
         prefix.drop_all()
         return self._stats(sched, tick_state, clock(), prefills, chunks)
-
-
-def latency_percentiles(finished: list[Finished], p=(50, 99)) -> dict:
-    """Request-completion latency (arrival -> finish) percentiles, ms."""
-    lats = [(f.finished_at - f.request.arrival) * 1e3 for f in finished]
-    if not lats:
-        return {f"p{q}": 0.0 for q in p}
-    return {f"p{q}": float(np.percentile(lats, q)) for q in p}

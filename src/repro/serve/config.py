@@ -45,8 +45,15 @@ class ServeConfig:
     group_experts: Optional[bool] = None  # MoE: grouped one-launch
     #                                 kernel (None follows plan flags)
     interpret: bool = True          # Pallas interpret mode (CPU)
+    scheduler: str = "fifo"         # admission policy name from
+    #                                 repro.serve.policies.SCHEDULERS:
+    #                                 fifo | priority | slo
 
     def __post_init__(self):
+        from repro.serve.policies import SCHEDULERS
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}; "
+                             f"registered: {SCHEDULERS.names()}")
         if self.block_size is not None:
             if self.max_seq % self.block_size:
                 raise ValueError(

@@ -1,0 +1,21 @@
+"""Serving front door: async streaming gateway over the continuous
+engine.
+
+- :mod:`repro.serve.gateway.protocol` — the typed wire schema: request
+  fields, validation, and the ndjson stream events.
+- :mod:`repro.serve.gateway.server` — the asyncio front door:
+  ``EngineBridge`` runs the engine tick loop in a background thread
+  with a thread-safe submission queue and per-request async token
+  channels; ``Gateway`` speaks minimal HTTP/1.1 on top (``POST
+  /generate`` streaming, ``GET /metrics``, ``GET /healthz``).
+- :mod:`repro.serve.gateway.placement` — artifact-driven pool sizing:
+  a worker reads a bundle's ``report.json`` + ``config.json`` (never
+  the weights) to size its slot/block pools for its memory budget.
+"""
+from repro.serve.gateway.placement import Placement, plan_placement
+from repro.serve.gateway.protocol import (GenerateRequest, ProtocolError,
+                                          parse_request)
+from repro.serve.gateway.server import EngineBridge, Gateway
+
+__all__ = ["GenerateRequest", "ProtocolError", "parse_request",
+           "EngineBridge", "Gateway", "Placement", "plan_placement"]

@@ -1,6 +1,7 @@
 """docs/ ↔ code sync: the recipe schema reference must name every
 dataclass field and every registered plug-in, and the serving guide
-must name every ServeConfig field, so the docs cannot rot as
+must name every ServeConfig field, every gateway wire field, and every
+registered scheduler policy, so the docs cannot rot as
 fields/selectors/categories/stages are added; README + docs internal
 links must resolve."""
 import dataclasses
@@ -14,6 +15,8 @@ from repro.core.recipe import GRANULARITIES, CalibrationSpec, PruneRecipe
 from repro.core.registry import CATEGORIES, SELECTORS, STAGES
 from repro.core.sweep import GridSpec
 from repro.serve.config import ServeConfig
+from repro.serve.gateway.protocol import GenerateRequest
+from repro.serve.policies import SCHEDULERS
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEMA_DOC = os.path.join(REPO, "docs", "recipe-schema.md")
@@ -44,16 +47,40 @@ def test_every_dataclass_field_documented(schema_text, cls):
                          f"docs/recipe-schema.md: {missing}")
 
 
-def test_every_serveconfig_field_documented():
+@pytest.fixture(scope="module")
+def serving_text():
+    assert os.path.exists(SERVING_DOC), "docs/serving.md is missing"
+    with open(SERVING_DOC) as f:
+        return f.read()
+
+
+def test_every_serveconfig_field_documented(serving_text):
     """docs/serving.md is the ServeConfig reference: every dataclass
     field must appear as inline code, so the serving guide cannot rot
     as serving knobs are added."""
-    assert os.path.exists(SERVING_DOC), "docs/serving.md is missing"
-    with open(SERVING_DOC) as f:
-        codes = _codes(f.read())
+    codes = _codes(serving_text)
     missing = [f.name for f in dataclasses.fields(ServeConfig)
                if f.name not in codes]
     assert not missing, (f"ServeConfig fields missing from "
+                         f"docs/serving.md: {missing}")
+
+
+def test_every_gateway_request_field_documented(serving_text):
+    """The gateway wire schema (GenerateRequest) is part of the serving
+    guide: every wire field must appear as inline code."""
+    codes = _codes(serving_text)
+    missing = [f.name for f in dataclasses.fields(GenerateRequest)
+               if f.name not in codes]
+    assert not missing, (f"GenerateRequest wire fields missing from "
+                         f"docs/serving.md: {missing}")
+
+
+def test_every_scheduler_policy_documented(serving_text):
+    """Every registered admission policy must be named in the serving
+    guide's policy table."""
+    codes = _codes(serving_text)
+    missing = [n for n in SCHEDULERS.names() if n not in codes]
+    assert not missing, (f"scheduler policies missing from "
                          f"docs/serving.md: {missing}")
 
 

@@ -1,0 +1,257 @@
+"""Gateway front door: wire-schema validation, EngineBridge streaming
+token-identity against driving the engine directly (contiguous and
+paged/prefix-shared, greedy and sampled), the HTTP surface (ndjson
+streaming, /metrics, /healthz, 400s), structured reject reasons on the
+response path, and artifact-driven placement sizing."""
+import asyncio
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import small_config
+from repro.models import transformer as T
+from repro.models.specs import config_to_dict
+from repro.serve.batching import ContinuousEngine
+from repro.serve.config import ServeConfig
+from repro.serve.gateway import (Gateway, GenerateRequest, ProtocolError,
+                                 parse_request, plan_placement)
+from repro.serve.gateway import protocol as P
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = small_config()
+    return T.init_model(jax.random.PRNGKey(0), cfg), cfg
+
+
+def _serve_cfg(**kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_seq", 32)
+    return ServeConfig(compute_dtype=jnp.float32,
+                       cache_dtype=jnp.float32, **kw)
+
+
+# -------------------------------------------------------------- protocol
+
+def test_parse_request_happy_path():
+    greq = parse_request({"tokens": [1, 2, 3], "max_new_tokens": 4,
+                          "temperature": 0.5, "seed": 7, "priority": 2,
+                          "prefix_id": "sys", "deadline_ms": 100,
+                          "eos_id": 0, "stream": False}, vocab=256)
+    assert greq.tokens == (1, 2, 3) and not greq.stream
+    req = P.to_engine_request(greq, uid=9, vocab=256)
+    assert isinstance(req, Request)
+    assert (req.uid, req.priority, req.deadline_ms) == (9, 2, 100)
+
+
+def test_parse_request_prompt_encodes_bytes():
+    greq = parse_request({"prompt": "hi"}, vocab=256)
+    req = P.to_engine_request(greq, uid=0, vocab=256)
+    assert req.prompt == [ord("h"), ord("i")]
+
+
+@pytest.mark.parametrize("body", [
+    [],                                          # not an object
+    {},                                          # neither prompt nor tokens
+    {"prompt": "x", "tokens": [1]},              # both
+    {"tokens": []},                              # empty
+    {"tokens": [1, "a"]},                        # non-int
+    {"tokens": [999999]},                        # out of vocab
+    {"tokens": [1], "max_new_tokens": 0},
+    {"tokens": [1], "deadline_ms": -5},
+    {"tokens": [1], "seed": "x"},
+    {"tokens": [1], "bogus": 1},                 # unknown field
+])
+def test_parse_request_rejects(body):
+    with pytest.raises(ProtocolError):
+        parse_request(body, vocab=256)
+
+
+def test_request_fields_match_dataclass():
+    assert set(P.REQUEST_FIELDS) == {
+        f.name for f in dataclasses.fields(GenerateRequest)}
+
+
+# ------------------------------------------------------- token identity
+
+def _http_generate(port, body: dict):
+    """One raw POST /generate; returns the parsed ndjson event list
+    (or the single JSON object for non-streaming responses)."""
+    async def go():
+        r, w = await asyncio.open_connection("127.0.0.1", port)
+        payload = json.dumps(body).encode()
+        w.write(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                b"Content-Length: %d\r\n\r\n" % len(payload) + payload)
+        await w.drain()
+        data = await r.read()
+        w.close()
+        await w.wait_closed()
+        return data
+    data = asyncio.run(go())
+    head, _, body_bytes = data.partition(b"\r\n\r\n")
+    events = [json.loads(line) for line in body_bytes.splitlines()
+              if line.strip()]
+    status = int(head.split(b" ", 2)[1])
+    return status, events
+
+
+def _roundtrip(params, cfg, serve, wire_reqs, engine_reqs,
+               temperature=0.0, seed=0):
+    """Serve ``wire_reqs`` through a real HTTP gateway and return
+    per-uid token lists, plus the direct-engine outputs for
+    ``engine_reqs`` on an identically-configured engine."""
+    direct_eng = ContinuousEngine(params, cfg, serve)
+    fin, _ = direct_eng.run(engine_reqs, temperature=temperature,
+                            seed=seed)
+    direct = {f.request.uid: f.tokens for f in fin}
+
+    async def go():
+        gw = await Gateway(ContinuousEngine(params, cfg, serve),
+                           temperature=temperature, seed=seed).start()
+
+        async def one(body):
+            r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+            payload = json.dumps(body).encode()
+            w.write(b"POST /generate HTTP/1.1\r\nHost: t\r\n"
+                    b"Content-Length: %d\r\n\r\n" % len(payload) + payload)
+            await w.drain()
+            data = await r.read()
+            w.close()
+            return [json.loads(line) for line in
+                    data.partition(b"\r\n\r\n")[2].splitlines()
+                    if line.strip()]
+        results = await asyncio.gather(*[one(b) for b in wire_reqs])
+        await gw.close()
+        return results
+
+    streamed = {}
+    for events in asyncio.run(go()):
+        done = [e for e in events if e["event"] == "done"]
+        assert done, f"no terminal event in {events}"
+        toks = [e["token"] for e in events if e["event"] == "token"]
+        assert toks == done[0]["tokens"], "stream disagrees with done"
+        streamed[done[0]["uid"]] = done[0]["tokens"]
+    return direct, streamed
+
+
+def test_gateway_token_identity_contiguous_sampled(served):
+    params, cfg = served
+    prompts = [[1, 2, 3, 4], [9, 8, 7], [5, 5, 5, 5, 5]]
+    wire = [{"tokens": p, "max_new_tokens": 6, "temperature": 0.8,
+             "seed": 40 + i} for i, p in enumerate(prompts)]
+    engine = [Request(uid=i, prompt=p, max_new_tokens=6, temperature=0.8,
+                      seed=40 + i) for i, p in enumerate(prompts)]
+    direct, streamed = _roundtrip(params, cfg, _serve_cfg(), wire, engine)
+    assert streamed == direct
+
+
+def test_gateway_token_identity_paged_shared_prefix(served):
+    params, cfg = served
+    serve = _serve_cfg(max_seq=64, block_size=8, prefill_chunk=8)
+    prefix = list(range(1, 17))
+    tails = [[20 + i] for i in range(3)]
+    wire = [{"tokens": prefix + t, "max_new_tokens": 5,
+             "prefix_id": "sys"} for t in tails]
+    engine = [Request(uid=i, prompt=prefix + t, max_new_tokens=5,
+                      prefix_id="sys") for i, t in enumerate(tails)]
+    direct, streamed = _roundtrip(params, cfg, serve, wire, engine)
+    assert streamed == direct
+
+
+# --------------------------------------------------------- http surface
+
+def test_gateway_http_endpoints_and_rejects(served):
+    params, cfg = served
+
+    async def go():
+        eng = ContinuousEngine(params, cfg, _serve_cfg(scheduler="slo"))
+        gw = await Gateway(eng).start()
+
+        async def raw(request: bytes):
+            r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+            w.write(request)
+            await w.drain()
+            data = await r.read()
+            w.close()
+            return data
+
+        health = await raw(b"GET /healthz HTTP/1.1\r\n\r\n")
+        assert health.startswith(b"HTTP/1.1 200")
+        assert json.loads(health.partition(b"\r\n\r\n")[2]) == {
+            "status": "ok"}
+
+        missing = await raw(b"GET /nope HTTP/1.1\r\n\r\n")
+        assert missing.startswith(b"HTTP/1.1 404")
+
+        bad = json.dumps({"tokens": []}).encode()
+        resp = await raw(b"POST /generate HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(bad) + bad)
+        assert resp.startswith(b"HTTP/1.1 400")
+        assert json.loads(resp.partition(b"\r\n\r\n")[2])["event"] == \
+            "error"
+
+        # non-streaming: single JSON terminal event
+        body = json.dumps({"tokens": [1, 2], "max_new_tokens": 3,
+                           "stream": False}).encode()
+        resp = await raw(b"POST /generate HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(body) + body)
+        done = json.loads(resp.partition(b"\r\n\r\n")[2])
+        assert done["event"] == "done" and len(done["tokens"]) == 3
+        assert set(done["metrics"]) == {"queue_ms", "prefill_ms",
+                                        "decode_ms", "total_ms"}
+
+        # oversize prompt -> structured rejected event on the wire
+        body = json.dumps({"tokens": [1] * 40, "max_new_tokens": 2,
+                           "stream": False}).encode()
+        resp = await raw(b"POST /generate HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(body) + body)
+        rej = json.loads(resp.partition(b"\r\n\r\n")[2])
+        assert rej == {"event": "rejected", "uid": rej["uid"],
+                       "reason": "prompt_too_long"}
+
+        metrics = await raw(b"GET /metrics HTTP/1.1\r\n\r\n")
+        m = json.loads(metrics.partition(b"\r\n\r\n")[2])
+        assert m["metrics"]["counters"]["requests.finished"] == 1.0
+        assert m["metrics"]["counters"][
+            "requests.rejected.prompt_too_long"] == 1.0
+        assert "request.total_ms" in m["metrics"]["series"]
+        assert m["stats"]["reject_reasons"] == {"prompt_too_long": 1}
+
+        fin, stats = await gw.close()
+        return fin, stats
+
+    fin, stats = asyncio.run(go())
+    assert len(fin) == 1 and stats.rejected == 1
+    assert stats.reject_reasons == {"prompt_too_long": 1}
+
+
+# ------------------------------------------------------------ placement
+
+def test_plan_placement_from_report(tmp_path, served):
+    _, cfg = served
+    (tmp_path / "report.json").write_text(json.dumps(
+        {"bytes_after": 1 << 20, "params_before": 1000,
+         "params_after": 600}))
+    (tmp_path / "config.json").write_text(
+        json.dumps(config_to_dict(cfg)))
+    # cfg: 2 periods x 1 attention layer, n_kv=2, head_dim=16, f32
+    place = plan_placement(tmp_path, 8 << 20, max_seq=64, block_size=8,
+                           cache_dtype=jnp.float32, headroom=0.0)
+    assert place.kv_token_bytes == 2 * 2 * 2 * 16 * 4
+    assert place.weights_bytes == 1 << 20
+    assert place.density == pytest.approx(0.6)
+    expected_tokens = ((8 << 20) - (1 << 20)) // place.kv_token_bytes
+    assert place.kv_tokens == expected_tokens
+    assert place.serve.n_blocks == expected_tokens // 8
+    assert place.serve.paged and place.serve.max_seq == 64
+
+    contig = plan_placement(tmp_path, 8 << 20, max_seq=64,
+                            cache_dtype=jnp.float32, max_slots=4)
+    assert contig.serve.max_slots == 4 and contig.serve.block_size is None
+
+    with pytest.raises(ValueError):        # weights alone bust the budget
+        plan_placement(tmp_path, 1 << 20, max_seq=64)
