@@ -45,9 +45,9 @@ def main() -> None:
     fast = not args.full
 
     from benchmarks import (composite, finetune, kernel_bench,
-                            moe_kernel_bench, overheads, prune_pipeline,
-                            quality, quant_compare, serve_bench,
-                            sweep_bench)
+                            moe_kernel_bench, overheads, paged_attn_bench,
+                            prune_pipeline, quality, quant_compare,
+                            serve_bench, sweep_bench)
 
     sections = []
     rows = []
@@ -61,6 +61,7 @@ def main() -> None:
         ("table13_quant_compare", lambda: quant_compare.main(fast)),
         ("kernel_bench", lambda: kernel_bench.main(fast)),
         ("moe_kernel_bench", lambda: moe_kernel_bench.main(fast)),
+        ("paged_attn_bench", lambda: paged_attn_bench.main(fast)),
         ("serve_bench", lambda: serve_bench.main(fast)),
         ("prune_pipeline", lambda: prune_pipeline.main(fast)),
         ("recipe_sweep", lambda: sweep_bench.main(fast)),
@@ -150,6 +151,11 @@ def _derive(name: str, result) -> str:
                     f";launches_per_proj="
                     f"{result['grouped_launches_per_proj']:.0f}vs"
                     f"{result['loop_launches_per_proj']:.0f}")
+        if name == "paged_attn_bench":
+            return (f"kv_bytes_cut={result['kv_bytes_reduction']:.2f}"
+                    f";token_identical="
+                    f"{bool(result['token_identical'])}"
+                    f";kernel_err={result['kernel_max_err']:.1e}")
         if name == "serve_bench":
             return (f"continuous_vs_static={result['speedup']:.2f}x"
                     f";sparse_agrees={result['sparse_agrees']}"
@@ -190,6 +196,12 @@ def _metrics(name: str, result, us: float) -> dict:
             bs, _ = result
             m.update({"skip_frac": bs["skip_frac"],
                       "allclose_err": bs["allclose_err"]})
+        elif name == "paged_attn_bench":
+            m.update({k: result[k] for k in (
+                "kernel_agrees", "kernel_max_err", "token_identical",
+                "kernel_traced", "kv_bytes_reduction",
+                "gather_kv_bytes_per_tick", "fused_kv_bytes_per_tick",
+                "gather_tokens_per_s", "fused_tokens_per_s")})
         elif name == "serve_bench":
             m.update({"continuous_vs_static": result["speedup"],
                       "sparse_agrees": float(result["sparse_agrees"]),

@@ -1,0 +1,25 @@
+"""Jit wrapper matching the decode step's (B, 1, H, D) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import counters
+from repro.kernels.paged_attention.kernel import paged_attention
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_decode(q, k_arena, v_arena, block_tables, lengths,
+                           interpret: bool = False):
+    """q: (B, 1, Hq, D); k/v arena: (n_blocks + 1, bs, Hkv, D);
+    block_tables: (B, max_blocks); lengths: (B,) -> (B, 1, Hq, D)."""
+    counters.record("paged_attention")
+    B, S, Hq, D = q.shape
+    assert S == 1, f"paged_attention is decode-only (S=1), got S={S}"
+    of = paged_attention(q[:, 0], k_arena, v_arena,
+                         jnp.asarray(block_tables, jnp.int32),
+                         jnp.asarray(lengths, jnp.int32),
+                         interpret=interpret)
+    return of[:, None]

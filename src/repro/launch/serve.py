@@ -139,7 +139,8 @@ def _run_gateway(args, params, cfg, packed) -> None:
                                prefill_chunk=args.prefill_chunk)
         serve_cfg = dataclasses.replace(place.serve,
                                         compute_dtype=jnp.float32,
-                                        group_experts=group)
+                                        group_experts=group,
+                                        paged_kernel=args.paged_kernel)
         print(f"placement: weights {place.weights_bytes} B "
               f"(density {place.density:.0%}), KV "
               f"{place.kv_token_bytes} B/token -> {place.kv_tokens} "
@@ -154,6 +155,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
                                 compute_dtype=jnp.float32,
                                 cache_dtype=jnp.float32,
                                 group_experts=group,
+                                paged_kernel=args.paged_kernel,
                                 scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
 
@@ -214,6 +216,10 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
                     help="paged: split prompt prefill into C-token "
                          "chunks interleaved with decode ticks")
+    ap.add_argument("--paged-kernel", action="store_true",
+                    help="paged: decode through the fused Pallas "
+                         "paged-attention kernel instead of gathering "
+                         "each slot's logical KV view")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="paged demo: prepend one shared system prompt "
                          "to every request under a common prefix_id")
@@ -288,6 +294,7 @@ def main() -> None:
                             prefill_chunk=args.prefill_chunk,
                             compute_dtype=jnp.float32,
                             cache_dtype=jnp.float32, group_experts=group,
+                            paged_kernel=args.paged_kernel,
                             scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
     finished, stats = eng.run(reqs, temperature=args.temperature)

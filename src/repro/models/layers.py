@@ -185,12 +185,17 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
                     positions: jax.Array, cache: Optional[dict] = None,
                     cache_index: Optional[jax.Array] = None,
                     block_tables: Optional[jax.Array] = None,
-                    n_valid: Optional[jax.Array] = None):
+                    n_valid: Optional[jax.Array] = None,
+                    paged_kernel: bool = False,
+                    interpret: bool = True):
     """Returns (out, new_cache). cache: {'k','v': (B, S_max, n_kv, D)},
     or a paged arena {'k','v': (n_blocks, block_size, n_kv, D)} when
     ``block_tables`` (B, max_blocks) maps each sequence's logical blocks
     onto arena blocks; ``n_valid`` (B,) masks right-padded positions of
-    a padded (chunked) prefill."""
+    a padded (chunked) prefill. ``paged_kernel`` selects the fused Pallas
+    decode kernel (``interpret`` in its CPU interpret mode) on the paged
+    S==1 path; prefill and the default decode path use the gather
+    reference."""
     dtype = x.dtype
     tap("attn_qkv", x)
     q = jnp.einsum("bsd,dhe->bshe", x, params["q"].astype(dtype))
@@ -241,6 +246,19 @@ def apply_attention(params: dict, spec: AttentionSpec, x: jax.Array,
         ck = paged_write(cache["k"], k, block_tables, ci, n_valid)
         cv = paged_write(cache["v"], v, block_tables, ci, n_valid)
         new_cache = {"k": ck, "v": cv}
+        if paged_kernel and x.shape[1] == 1:
+            # fused decode: the Pallas kernel walks the block table in
+            # scalar memory and gathers arena blocks in-kernel — the
+            # logical view below is never materialized
+            from repro.kernels.paged_attention.ops import (
+                paged_attention_decode)
+            nv1 = (n_valid if n_valid is not None
+                   else jnp.full((x.shape[0],), 1, jnp.int32))
+            out = paged_attention_decode(q, ck, cv, block_tables,
+                                         ci + nv1, interpret=interpret)
+            tap("attn_o", out, channel_axes=(-2, -1))
+            y = jnp.einsum("bshe,hed->bsd", out, params["o"].astype(dtype))
+            return hint(y, "batch", "seq", "embed"), new_cache
         kview = paged_gather(ck, block_tables)
         vview = paged_gather(cv, block_tables)
         T_kv = kview.shape[1]

@@ -165,14 +165,16 @@ def apply_block(block_params: dict, cfg: ModelConfig, spec: LayerSpec,
                 cache: Optional[dict], cache_index,
                 layer: int = 0, mlp_apply=None,
                 block_tables: Optional[jax.Array] = None,
-                n_valid: Optional[jax.Array] = None):
+                n_valid: Optional[jax.Array] = None,
+                paged_kernel: bool = False, interpret: bool = True):
     h = L.apply_norm(block_params["norm1"], cfg.norm, x)
     new_cache = {}
     if isinstance(spec.mixer, AttentionSpec):
         mix, nc = L.apply_attention(
             block_params["attn"], spec.mixer, h, positions,
             cache["attn"] if cache is not None else None, cache_index,
-            block_tables=block_tables, n_valid=n_valid)
+            block_tables=block_tables, n_valid=n_valid,
+            paged_kernel=paged_kernel, interpret=interpret)
         if nc is not None:
             new_cache["attn"] = nc
     else:
@@ -203,7 +205,8 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
             cache=None, cache_index=None,
             compute_dtype=jnp.bfloat16, mlp_apply=None,
             block_tables: Optional[jax.Array] = None,
-            n_valid: Optional[jax.Array] = None):
+            n_valid: Optional[jax.Array] = None,
+            paged_kernel: bool = False, interpret: bool = True):
     """Returns (logits, new_cache, aux_loss).
 
     tokens: (B, S) int32. frontend_embeds: (B, F, d) stub embeddings that
@@ -214,7 +217,9 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
     (``init_paged_pool``) and each sequence's KV rows are scattered /
     gathered through its block-table row; ``n_valid`` (B,) masks
     right-padded positions of a padded (chunked) prefill into the
-    scratch block. Unrolled configs only.
+    scratch block. Unrolled configs only. ``paged_kernel`` routes paged
+    S==1 steps through the fused Pallas decode kernel (``interpret``
+    selects its CPU interpret mode) instead of the gather path.
     mlp_apply: optional ``(block_params, ffn_spec, x, layer) -> y``
     override for FFN layers (``ffn_spec`` is an ``MLPSpec`` or
     ``MoESpec``) — the serving block-sparse fast path; MoE layers run
@@ -287,7 +292,9 @@ def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
                                    cache_index, layer=layer,
                                    mlp_apply=mlp_apply,
                                    block_tables=block_tables,
-                                   n_valid=n_valid)
+                                   n_valid=n_valid,
+                                   paged_kernel=paged_kernel,
+                                   interpret=interpret)
             if cfg.remat:
                 body = jax.checkpoint(
                     body, policy=jax.checkpoint_policies.nothing_saveable)

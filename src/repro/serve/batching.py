@@ -215,8 +215,10 @@ class ContinuousEngine:
         if serve.paged:
             self._prefill = jax.jit(make_paged_prefill_step(
                 cfg, serve.compute_dtype, mlp_apply))
-            decode = make_paged_decode_step(cfg, serve.compute_dtype,
-                                            mlp_apply)
+            decode = make_paged_decode_step(
+                cfg, serve.compute_dtype, mlp_apply,
+                paged_kernel=serve.paged_kernel,
+                interpret=serve.interpret)
             self._copy_block = jax.jit(T.copy_pool_block)
         else:
             self._prefill = jax.jit(make_prefill_step(
@@ -524,12 +526,14 @@ class ContinuousEngine:
     def _blocks_for(self, req, prefix: PrefixCache) -> int:
         """Blocks a request must *own*: enough for every KV position it
         can write (prompt + budget, capped at max_seq), minus blocks a
-        prefix-cache hit would map in. Reserved in full at admission, so
-        decode never runs out of blocks mid-request."""
+        prefix-cache hit would map in, plus one copy-on-write reserve
+        when entering on shared blocks. Reserved in full at admission,
+        so neither decode nor COW can run out of blocks mid-request."""
         bs = self.serve.block_size
         cap = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
         shared = len(prefix.match(req.prefix_id, req.prompt))
-        return -(-cap // bs) - shared
+        own = -(-cap // bs) - shared
+        return own + (1 if shared else 0)
 
     def _run_paged(self, sched, state, max_ticks, max_burst, feed):
         serve = self.serve
@@ -541,6 +545,9 @@ class ContinuousEngine:
         tables = np.full((self.max_slots, serve.blocks_per_seq),
                          alloc.scratch, np.int32)
         slot_blocks: dict[int, list] = {}
+        # slot index -> block pre-claimed at admission for copy-on-write
+        # (only slots that entered on shared prefix blocks have one)
+        slot_reserve: dict[int, int] = {}
         t0 = time.perf_counter()
         clock = lambda: time.perf_counter() - t0  # noqa: E731
         tick_state = {"ticks": 0, "util": [], "peak": 0, "clock": clock}
@@ -570,6 +577,9 @@ class ContinuousEngine:
                 blocks = slot_blocks.pop(slot.index, None)
                 if blocks:
                     alloc.release(blocks)
+                reserve = slot_reserve.pop(slot.index, None)
+                if reserve is not None:
+                    alloc.release([reserve])    # COW never fired
                 tables[slot.index, :] = alloc.scratch
 
         while True:
@@ -601,6 +611,11 @@ class ContinuousEngine:
             for slot in admitted:
                 req = slot.request
                 shared, owned = pending.pop(req.uid)
+                if shared:
+                    # the last claimed block is the COW reserve: held
+                    # outside the table until a shared-block write needs
+                    # a private copy (or released at finish, unused)
+                    slot_reserve[slot.index] = owned.pop()
                 row = shared + owned
                 tables[slot.index, :] = alloc.scratch
                 tables[slot.index, :len(row)] = row
@@ -624,7 +639,12 @@ class ContinuousEngine:
             # (the slo policy's prefill/decode interleave budget) so
             # long-prompt admissions can't starve decode ticks
             prefill_slots = list(sched.prefilling.values())
-            budget = sched.policy.prefill_budget(len(sched.slots))
+            # sched.slots holds *started* (decoding) slots only —
+            # prefilling slots live in the disjoint sched.prefilling
+            # dict — so this is the decoding count the policy contract
+            # wants: unlimited chunks while nothing is decoding
+            n_decoding = len(sched.slots)
+            budget = sched.policy.prefill_budget(n_decoding)
             if budget is not None:
                 prefill_slots = prefill_slots[:budget]
             for slot in prefill_slots:
@@ -639,11 +659,33 @@ class ContinuousEngine:
                     release_if_finished(slot)
 
             # ---- copy-on-write guard: a decode write may never land in
-            # a block another sequence can still read
+            # a block another sequence can still read. The private copy
+            # comes out of the slot's admission-time reserve, never a
+            # fresh alloc — a full arena here must not raise OutOfBlocks
             active = sched.active()
             for s in active:
-                pool = alloc.ensure_writable(tables[s.index],
-                                             s.length // bs, pool)
+                j = s.length // bs
+                old = int(tables[s.index][j])
+                reserve = slot_reserve.get(s.index)
+                pool = alloc.ensure_writable(
+                    tables[s.index], j, pool, reserve=reserve)
+                new = int(tables[s.index][j])
+                if new != old:
+                    # the ownership list must track the swap: the shared
+                    # block's ref was dropped by ensure_writable; the
+                    # private copy is released at finish instead
+                    row = slot_blocks[s.index]
+                    row[row.index(old)] = new
+                    slot_reserve.pop(s.index, None)
+                elif reserve is not None:
+                    # first guarded decode tick and no copy was needed:
+                    # every shared block sits strictly below the write
+                    # frontier and the frontier block is now exclusively
+                    # ours, so COW can never fire for this slot again —
+                    # return the reserve instead of taxing the arena for
+                    # the slot's whole lifetime
+                    alloc.release([reserve])
+                    slot_reserve.pop(s.index, None)
 
             # the decode step runs over *every* slot row; slots still
             # mid-chunked-prefill must not have their real blocks

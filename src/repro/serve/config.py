@@ -44,6 +44,9 @@ class ServeConfig:
     #                                 prefill per prompt
     group_experts: Optional[bool] = None  # MoE: grouped one-launch
     #                                 kernel (None follows plan flags)
+    paged_kernel: bool = False      # paged decode: fused Pallas
+    #                                 paged-attention kernel instead of
+    #                                 the gather path (needs block_size)
     interpret: bool = True          # Pallas interpret mode (CPU)
     scheduler: str = "fifo"         # admission policy name from
     #                                 repro.serve.policies.SCHEDULERS:
@@ -67,6 +70,9 @@ class ServeConfig:
                     f"multiple of block_size {self.block_size}")
         elif self.prefill_chunk is not None:
             raise ValueError("prefill_chunk needs a paged pool "
+                             "(set block_size)")
+        if self.paged_kernel and self.block_size is None:
+            raise ValueError("paged_kernel needs a paged pool "
                              "(set block_size)")
 
     # ------------------------------------------------------------ paged

@@ -88,6 +88,15 @@ def plan_placement(artifact_dir, memory_bytes: int, *,
     if per_tok == 0:
         raise ValueError("config has no attention layers — paged/"
                          "contiguous KV placement does not apply")
+    if block_size is not None:
+        # mirror ServeConfig's invariants up front: a bad block size
+        # must fail with a clear error here, not a ZeroDivisionError
+        # (block_size > max_seq) or a late ServeConfig raise
+        if block_size > max_seq or max_seq % block_size:
+            raise ValueError(
+                f"block_size {block_size} must divide max_seq {max_seq} "
+                "(the paged view must match the contiguous pool width "
+                "exactly)")
     kv_budget = int(memory_bytes * (1.0 - headroom)) - weights
     tokens = kv_budget // per_tok
     if tokens < max_seq:
@@ -96,8 +105,22 @@ def plan_placement(artifact_dir, memory_bytes: int, *,
             f"({weights} bytes) plus one {max_seq}-token sequence of KV "
             f"({max_seq * per_tok} bytes at {per_tok} B/token)")
     if block_size is not None:
-        n_blocks = tokens // block_size
-        slots = max(1, min(max_slots, n_blocks // (max_seq // block_size)))
+        # the arena allocates n_blocks + 1 blocks per layer (the +1 is
+        # the padding scratch block), so the scratch block's bytes come
+        # out of the same budget: a plan sized exactly to memory_bytes
+        # must not oversubscribe it
+        blocks_per_seq = max_seq // block_size
+        n_blocks = tokens // block_size - 1
+        if n_blocks < blocks_per_seq:
+            raise ValueError(
+                f"memory budget {memory_bytes} cannot hold the weights "
+                f"({weights} bytes) plus a {max_seq}-token paged arena "
+                f"and its scratch block "
+                f"({(blocks_per_seq + 1) * block_size * per_tok} bytes)")
+        # round the slot cap down to full sequences: a planned slot must
+        # always be able to hold max_seq tokens of its own
+        slots = max(1, min(max_slots, n_blocks // blocks_per_seq))
+        tokens = n_blocks * block_size  # usable capacity (scratch excluded)
         serve = ServeConfig(max_slots=slots, max_seq=max_seq,
                             block_size=block_size, n_blocks=n_blocks,
                             cache_dtype=cache_dtype, scheduler=scheduler,

@@ -140,5 +140,8 @@ def rejected_event(rej: Rejection) -> dict:
             "reason": rej.reason}
 
 
-def error_event(message: str) -> dict:
-    return {"event": "error", "error": message}
+def error_event(message: str, uid: Optional[int] = None) -> dict:
+    ev = {"event": "error", "error": message}
+    if uid is not None:
+        ev["uid"] = uid
+    return ev

@@ -160,8 +160,13 @@ class EngineBridge:
             channel.put_nowait(ev)
 
     def _fail_all(self, exc: BaseException) -> None:
+        """Engine thread died: every in-flight channel gets a terminal
+        wire ``error`` event (tagged with its uid) instead of waiting
+        forever; ``alive`` is already False, so ``/healthz`` flips to
+        503 and new submits are refused."""
         for uid, channel in self._channels.items():
-            channel.put_nowait(P.error_event(f"engine died: {exc!r}"))
+            channel.put_nowait(
+                P.error_event(f"engine died: {exc!r}", uid=uid))
         self._channels.clear()
 
 
@@ -268,7 +273,10 @@ class Gateway:
             last = None
             async for ev in self.bridge.events(uid, channel):
                 last = ev
-            await self._json(writer, 200, last)
+            # a terminal error event (engine death mid-request) must not
+            # masquerade as a successful completion on the buffered path
+            status = 503 if last["event"] == "error" else 200
+            await self._json(writer, status, last)
             return
         writer.write(b"HTTP/1.1 200 OK\r\n"
                      b"Content-Type: application/x-ndjson\r\n"

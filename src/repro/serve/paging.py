@@ -87,18 +87,27 @@ class BlockAllocator:
             else:
                 self._refs[b] = r - 1
 
-    def ensure_writable(self, table, j: int, pool):
+    def ensure_writable(self, table, j: int, pool,
+                        reserve: Optional[int] = None):
         """Copy-on-write: make ``table[j]`` safe for its owner to write.
 
-        If the block is shared (refcount > 1), allocate a private copy,
-        duplicate its contents on device, and drop the shared
-        reference. Returns the (possibly updated) pool. ``table`` is a
-        mutable host-side sequence of physical block ids.
+        If the block is shared (refcount > 1), place a private copy into
+        ``reserve`` — a block the owner already claimed at admission
+        time — duplicate the contents on device, and drop the shared
+        reference. Without a reserve the copy block is allocated here,
+        which can raise :class:`OutOfBlocks` against a full arena:
+        admission must pre-claim the reserve for any request entering on
+        shared blocks so COW can never fail mid-tick. Returns the
+        (possibly updated) pool. ``table`` is a mutable host-side
+        sequence of physical block ids.
         """
         b = int(table[j])
         if self._refs.get(b, 0) <= 1:
             return pool                 # exclusive (or scratch): no-op
-        (fresh,) = self.alloc(1)
+        if reserve is not None:
+            fresh = reserve             # refcount 1 since admission
+        else:
+            (fresh,) = self.alloc(1)
         pool = T.copy_pool_block(pool, b, fresh)
         self.release([b])
         table[j] = fresh
@@ -189,14 +198,19 @@ def make_paged_prefill_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
 
 
 def make_paged_decode_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16,
-                           mlp_apply=None):
+                           mlp_apply=None, paged_kernel: bool = False,
+                           interpret: bool = True):
     """One token for every slot against the paged pool: the per-slot
     ``lengths`` vector and ``block_tables`` play the role the vector
-    ``cache_index`` plays for the contiguous pool."""
+    ``cache_index`` plays for the contiguous pool. ``paged_kernel``
+    routes attention through the fused Pallas paged-attention kernel
+    (block tables walked in scalar memory, K/V blocks gathered in-kernel)
+    instead of materializing each slot's logical view."""
     def paged_decode_step(params, pool, tokens, lengths, block_tables):
         logits, pool, _ = T.forward(
             params, cfg, tokens, cache=pool, cache_index=lengths,
             block_tables=block_tables, compute_dtype=compute_dtype,
-            mlp_apply=mlp_apply)
+            mlp_apply=mlp_apply, paged_kernel=paged_kernel,
+            interpret=interpret)
         return logits[:, -1, :], pool
     return paged_decode_step

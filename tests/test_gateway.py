@@ -229,6 +229,104 @@ def test_gateway_http_endpoints_and_rejects(served):
     assert stats.reject_reasons == {"prompt_too_long": 1}
 
 
+# ----------------------------------------------------- crash propagation
+
+def _crash_after(eng, n_bursts: int, exc: Exception):
+    """Make the engine's decode burst raise on its ``n_bursts``-th call,
+    simulating a device failure mid-serving."""
+    calls = {"n": 0}
+    orig = eng._decode_burst
+
+    def dying(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] >= n_bursts:
+            raise exc
+        return orig(*a, **kw)
+
+    eng._decode_burst = dying
+
+
+def test_gateway_engine_crash_streams_error_and_degrades(served):
+    """Engine thread death mid-stream must surface as a terminal wire
+    ``error`` event carrying the request's uid (not a silent hang),
+    flip /healthz to 503, refuse new submissions with 503, and re-raise
+    from ``close()`` — the failure is never swallowed."""
+    params, cfg = served
+    eng = ContinuousEngine(params, cfg, _serve_cfg())
+    _crash_after(eng, 2, RuntimeError("injected device failure"))
+
+    async def go():
+        gw = await Gateway(eng).start()
+
+        async def raw(request: bytes):
+            r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+            w.write(request)
+            await w.drain()
+            data = await r.read()
+            w.close()
+            return data
+
+        # long request: first burst streams tokens, second burst dies
+        payload = json.dumps({"tokens": [1, 2, 3],
+                              "max_new_tokens": 30}).encode()
+        data = await raw(b"POST /generate HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(payload)
+                         + payload)
+        events = [json.loads(line) for line in
+                  data.partition(b"\r\n\r\n")[2].splitlines()
+                  if line.strip()]
+        assert events, "stream hung instead of erroring"
+        assert [e["event"] for e in events[:-1]].count("token") == \
+            len(events) - 1
+        assert len(events) > 1, "no tokens streamed before the crash"
+        last = events[-1]
+        assert last["event"] == "error" and last["uid"] == events[0]["uid"]
+        assert "injected device failure" in last["error"]
+
+        # the gateway is now degraded, not pretending to be healthy
+        health = await raw(b"GET /healthz HTTP/1.1\r\n\r\n")
+        assert health.startswith(b"HTTP/1.1 503")
+        resp = await raw(b"POST /generate HTTP/1.1\r\n"
+                         b"Content-Length: %d\r\n\r\n" % len(payload)
+                         + payload)
+        assert resp.startswith(b"HTTP/1.1 503")
+        assert json.loads(resp.partition(b"\r\n\r\n")[2])["event"] == \
+            "error"
+
+        with pytest.raises(RuntimeError, match="injected device failure"):
+            await gw.close()
+
+    asyncio.run(go())
+
+
+def test_gateway_engine_crash_buffered_returns_503(served):
+    """The buffered (``stream: false``) path used to return the
+    terminal event with HTTP 200 even when it was an engine-death
+    ``error`` — a crash must not masquerade as a completion."""
+    params, cfg = served
+    eng = ContinuousEngine(params, cfg, _serve_cfg())
+    _crash_after(eng, 1, RuntimeError("injected device failure"))
+
+    async def go():
+        gw = await Gateway(eng).start()
+        payload = json.dumps({"tokens": [4, 5, 6], "max_new_tokens": 8,
+                              "stream": False}).encode()
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        w.write(b"POST /generate HTTP/1.1\r\n"
+                b"Content-Length: %d\r\n\r\n" % len(payload) + payload)
+        await w.drain()
+        data = await r.read()
+        w.close()
+        assert data.startswith(b"HTTP/1.1 503")
+        ev = json.loads(data.partition(b"\r\n\r\n")[2])
+        assert ev["event"] == "error" and "injected" in ev["error"]
+        assert ev["uid"] == 0
+        with pytest.raises(RuntimeError, match="injected device failure"):
+            await gw.close()
+
+    asyncio.run(go())
+
+
 # ------------------------------------------------------------ placement
 
 def test_plan_placement_from_report(tmp_path, served):
@@ -244,10 +342,18 @@ def test_plan_placement_from_report(tmp_path, served):
     assert place.kv_token_bytes == 2 * 2 * 2 * 16 * 4
     assert place.weights_bytes == 1 << 20
     assert place.density == pytest.approx(0.6)
-    expected_tokens = ((8 << 20) - (1 << 20)) // place.kv_token_bytes
-    assert place.kv_tokens == expected_tokens
-    assert place.serve.n_blocks == expected_tokens // 8
+    budget_tokens = ((8 << 20) - (1 << 20)) // place.kv_token_bytes
+    # the arena allocates n_blocks + 1 (scratch) blocks, so one block of
+    # the budget goes to scratch and the usable capacity excludes it
+    expected_blocks = budget_tokens // 8 - 1
+    assert place.serve.n_blocks == expected_blocks
+    assert place.kv_tokens == expected_blocks * 8
+    # plan must fit the budget *including* the scratch block
+    arena_bytes = (expected_blocks + 1) * 8 * place.kv_token_bytes
+    assert place.weights_bytes + arena_bytes <= 8 << 20
     assert place.serve.paged and place.serve.max_seq == 64
+    # slot cap rounds down to full max_seq sequences
+    assert place.serve.max_slots <= expected_blocks // (64 // 8)
 
     contig = plan_placement(tmp_path, 8 << 20, max_seq=64,
                             cache_dtype=jnp.float32, max_slots=4)
@@ -255,3 +361,44 @@ def test_plan_placement_from_report(tmp_path, served):
 
     with pytest.raises(ValueError):        # weights alone bust the budget
         plan_placement(tmp_path, 1 << 20, max_seq=64)
+
+
+def test_plan_placement_rejects_bad_block_size(tmp_path, served):
+    """block_size > max_seq used to crash with ZeroDivisionError at
+    ``n_blocks // (max_seq // block_size)``; both it and a non-dividing
+    block_size must fail with a clear ValueError up front."""
+    _, cfg = served
+    (tmp_path / "report.json").write_text(json.dumps(
+        {"bytes_after": 1 << 20, "params_before": 1000,
+         "params_after": 600}))
+    (tmp_path / "config.json").write_text(json.dumps(config_to_dict(cfg)))
+    with pytest.raises(ValueError, match="block_size"):
+        plan_placement(tmp_path, 8 << 20, max_seq=64, block_size=128,
+                       cache_dtype=jnp.float32)
+    with pytest.raises(ValueError, match="block_size"):
+        plan_placement(tmp_path, 8 << 20, max_seq=64, block_size=24,
+                       cache_dtype=jnp.float32)
+
+
+def test_plan_placement_exact_budget_counts_scratch_block(tmp_path, served):
+    """A budget with room for the weights plus exactly max_seq tokens of
+    KV must be rejected on the paged path: the arena's +1 scratch block
+    would oversubscribe it (the pre-fix sizing handed out every block)."""
+    _, cfg = served
+    (tmp_path / "report.json").write_text(json.dumps(
+        {"bytes_after": 1 << 20, "params_before": 1000,
+         "params_after": 600}))
+    (tmp_path / "config.json").write_text(json.dumps(config_to_dict(cfg)))
+    per_tok = 2 * 2 * 2 * 16 * 4
+    exact = (1 << 20) + 64 * per_tok        # weights + one sequence, no slack
+    with pytest.raises(ValueError, match="scratch"):
+        plan_placement(tmp_path, exact, max_seq=64, block_size=8,
+                       cache_dtype=jnp.float32, headroom=0.0)
+    # one extra block of budget is enough: scratch fits, one slot planned
+    place = plan_placement(tmp_path, exact + 8 * per_tok, max_seq=64,
+                           block_size=8, cache_dtype=jnp.float32,
+                           headroom=0.0)
+    assert place.serve.max_slots == 1
+    assert place.serve.n_blocks == 64 // 8
+    arena_bytes = (place.serve.n_blocks + 1) * 8 * per_tok
+    assert place.weights_bytes + arena_bytes <= exact + 8 * per_tok

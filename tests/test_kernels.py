@@ -12,10 +12,12 @@ from repro.kernels.grouped_block_sparse.ops import (
     grouped_blocksparse_matmul, stack_expert_plans)
 from repro.kernels.grouped_block_sparse.ref import \
     grouped_block_sparse_matmul_ref
+from repro.kernels.paged_attention.ops import paged_attention_decode
+from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.ssd_scan.ops import ssd_apply
 from repro.kernels.wanda_metric.ops import outlier_ratio as kernel_outlier
 from repro.kernels.wanda_metric.ref import outlier_ratio_ref
-from repro.models.layers import _dense_attention
+from repro.models.layers import _dense_attention, paged_gather
 from repro.models.ssm import ssd_chunked
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -176,3 +178,84 @@ def test_flash_attention_kernel(hq, hkv, dtype):
     o_r = _dense_attention(q, k, v, pos, pos, causal=True)
     err = jnp.abs(o_k.astype(jnp.float32) - o_r.astype(jnp.float32)).max()
     assert float(err) < (5e-6 if dtype == jnp.float32 else 3e-2)
+
+
+# ------------------------------------------------------- paged attention
+
+def _paged_case(hq, hkv, dtype, B=4, M=4, bs=8, D=16, seed=7):
+    """Random paged decode problem: a shuffled arena (so physical order
+    never matches logical order), ragged lengths, one query per row."""
+    rng = np.random.default_rng(seed)
+    nb = B * M
+    k_arena = jnp.asarray(rng.normal(size=(nb + 1, bs, hkv, D)), dtype)
+    v_arena = jnp.asarray(rng.normal(size=(nb + 1, bs, hkv, D)), dtype)
+    tables = jnp.asarray(rng.permutation(nb).reshape(B, M), jnp.int32)
+    lengths = jnp.asarray(rng.integers(1, M * bs + 1, (B,)), jnp.int32)
+    q = jnp.asarray(rng.normal(size=(B, 1, hq, D)), dtype)
+    return q, k_arena, v_arena, tables, lengths
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (4, 4), (8, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel(hq, hkv, dtype):
+    q, ka, va, tables, lengths = _paged_case(hq, hkv, dtype)
+    o_k = paged_attention_decode(q, ka, va, tables, lengths,
+                                 interpret=True)
+    o_r = paged_attention_ref(q[:, 0].astype(jnp.float32),
+                              ka.astype(jnp.float32),
+                              va.astype(jnp.float32), tables, lengths)
+    err = jnp.abs(o_k[:, 0].astype(jnp.float32) - o_r).max()
+    assert float(err) < (5e-6 if dtype == jnp.float32 else 3e-2)
+
+
+def test_paged_attention_matches_gather_path():
+    """The kernel must agree with the serving gather path itself
+    (paged_gather + _dense_attention with the decode-time length mask),
+    not just the standalone oracle."""
+    q, ka, va, tables, lengths = _paged_case(4, 2, jnp.float32, seed=11)
+    o_k = paged_attention_decode(q, ka, va, tables, lengths,
+                                 interpret=True)
+    kview = paged_gather(ka, tables)
+    vview = paged_gather(va, tables)
+    T_kv = kview.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T_kv, dtype=jnp.int32)[None, :],
+                              (q.shape[0], T_kv))
+    valid = kv_pos < lengths[:, None]
+    # decode writes at position length-1, so causal == the length mask
+    o_g = _dense_attention(q, kview, vview, (lengths - 1)[:, None],
+                           kv_pos, causal=True, kv_valid=valid)
+    assert float(jnp.abs(o_k - o_g).max()) < TOL[jnp.float32]
+
+
+def test_paged_attention_scratch_masked_slot():
+    """A slot mid-chunked-prefill rides the decode burst with its table
+    masked to the scratch block and length clamped to 1 (its output is
+    discarded): the kernel must stay finite for it and exact for the
+    live rows."""
+    q, ka, va, tables, lengths = _paged_case(4, 2, jnp.float32, seed=13)
+    scratch = ka.shape[0] - 1
+    tables = tables.at[1].set(scratch)
+    lengths = lengths.at[1].set(1)
+    o_k = paged_attention_decode(q, ka, va, tables, lengths,
+                                 interpret=True)
+    assert bool(jnp.all(jnp.isfinite(o_k)))
+    o_r = paged_attention_ref(q[:, 0], ka, va, tables, lengths)
+    live = np.array([0, 2, 3])
+    err = jnp.abs(o_k[live, 0] - o_r[live]).max()
+    assert float(err) < TOL[jnp.float32]
+
+
+def test_paged_attention_shared_prefix_tables():
+    """Prefix sharing maps the same physical blocks into several rows'
+    tables: rows with identical tables, lengths, and queries must
+    produce identical outputs, and both must match the oracle."""
+    q, ka, va, tables, lengths = _paged_case(4, 2, jnp.float32, seed=17)
+    tables = tables.at[2].set(tables[0])        # full shared view
+    lengths = lengths.at[2].set(lengths[0])
+    q = q.at[2].set(q[0])
+    tables = tables.at[3, :2].set(tables[1, :2])  # shared 2-block prefix
+    o_k = paged_attention_decode(q, ka, va, tables, lengths,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_k[2]), np.asarray(o_k[0]))
+    o_r = paged_attention_ref(q[:, 0], ka, va, tables, lengths)
+    assert float(jnp.abs(o_k[:, 0] - o_r).max()) < TOL[jnp.float32]

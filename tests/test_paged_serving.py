@@ -36,6 +36,10 @@ def test_serveconfig_validation_and_derived():
         ServeConfig(max_seq=64, block_size=8, prefill_chunk=12)
     with pytest.raises(ValueError):
         ServeConfig(prefill_chunk=16)               # chunking needs paging
+    with pytest.raises(ValueError):
+        ServeConfig(paged_kernel=True)              # kernel needs paging
+    assert ServeConfig(max_seq=64, block_size=8,
+                       paged_kernel=True).paged_kernel
 
 
 def test_legacy_kwarg_constructors_warn(served):
@@ -89,6 +93,28 @@ def test_copy_on_write_shared_block():
     # exclusive blocks are left alone
     assert a.ensure_writable(table, 0, pool2) is pool2
     assert int(table[0]) == fresh
+
+
+def test_cow_at_zero_free_blocks_uses_reserve():
+    """COW against a full arena: without an admission-time reserve the
+    allocator raises OutOfBlocks mid-tick (the pre-fix failure, which
+    killed serve_forever); with the reserve the copy always succeeds."""
+    a = BlockAllocator(n_blocks=3, block_size=2)
+    pool = {"k": jnp.arange(8, dtype=jnp.float32).reshape(4, 2)}
+    (shared,) = a.alloc(1)
+    a.retain([shared])              # a second reader (prefix cache)
+    (reserve,) = a.alloc(1)         # claimed at admission for COW
+    a.alloc(1)                      # the rest of the arena is busy
+    assert a.n_free == 0
+    table = np.array([shared, a.scratch], np.int32)
+    with pytest.raises(OutOfBlocks):
+        a.ensure_writable(table, 0, pool)
+    assert int(table[0]) == shared          # failure mutated nothing
+    pool2 = a.ensure_writable(table, 0, pool, reserve=reserve)
+    assert int(table[0]) == reserve
+    np.testing.assert_array_equal(np.asarray(pool2["k"][reserve]),
+                                  np.asarray(pool["k"][shared]))
+    assert a.refcount(shared) == 1 and a.refcount(reserve) == 1
 
 
 def test_prefix_cache_share_and_mismatch():
@@ -191,6 +217,89 @@ def test_prefix_sharing_identical_and_counted(served):
     assert stats.prefill_chunks > stats.prefills    # chunking really ran
 
 
+def test_paged_kernel_token_identical_dense(served):
+    """The fused Pallas decode kernel is token-identical to the gather
+    path (which is itself token-identical to the contiguous pool) across
+    one-shot, chunked, and odd-arena paged configs."""
+    params, cfg = served
+    ref, _ = ContinuousEngine(params, cfg, ServeConfig(**BASE)).run(
+        _mixed_requests())
+    for extra in ({"block_size": 8},
+                  {"block_size": 8, "prefill_chunk": 8},
+                  {"block_size": 4, "n_blocks": 30}):
+        got, stats = ContinuousEngine(
+            params, cfg,
+            ServeConfig(**BASE, paged_kernel=True, **extra)
+        ).run(_mixed_requests())
+        assert _tokens(got) == _tokens(ref), extra
+        assert stats.rejected == 0
+
+
+def test_paged_kernel_prefix_sharing_identical(served):
+    """Fused kernel under prefix sharing: decode reads shared arena
+    blocks through several slots' tables and must match the gather
+    path token-for-token."""
+    params, cfg = served
+    rng = np.random.default_rng(1)
+    prefix = rng.integers(1, 256, (19,)).tolist()
+    reqs = lambda: [Request(uid=i, prompt=prefix + [50 + i],  # noqa: E731
+                            max_new_tokens=6, prefix_id="sys")
+                    for i in range(5)]
+    serve = dict(**BASE, block_size=8, prefill_chunk=8)
+    ref, _ = ContinuousEngine(params, cfg, ServeConfig(**serve)).run(reqs())
+    got, stats = ContinuousEngine(
+        params, cfg,
+        ServeConfig(**serve, paged_kernel=True)).run(reqs())
+    assert _tokens(got) == _tokens(ref)
+    assert stats.prompt_blocks_shared >= 4 and stats.rejected == 0
+
+
+def test_cow_reserve_claimed_at_admission(served, monkeypatch):
+    """Satellite regression: the COW copy block must be pre-claimed at
+    admission for prefix-sharing requests, so ``ensure_writable`` never
+    allocates inside the tick loop. The spy (a) asserts sharing slots
+    carry a reserve even at zero free blocks, and (b) *forces* the COW
+    path (unreachable organically: only pre-tail prompt blocks are ever
+    shared) by simulating a stale reader — exercising the
+    reserve-consumption and ownership-swap bookkeeping end to end."""
+    params, cfg = served
+    calls, cow = [], []
+    orig = BlockAllocator.ensure_writable
+
+    def spy(self, table, j, pool, reserve=None):
+        calls.append((self.n_free, reserve))
+        if reserve is not None and int(table[j]) != reserve:
+            b = int(table[j])
+            self.retain([b])            # stale reader forces the copy
+            pool = orig(self, table, j, pool, reserve=reserve)
+            self.release([b])
+            assert int(table[j]) == reserve
+            cow.append(b)
+            return pool
+        return orig(self, table, j, pool, reserve=reserve)
+
+    monkeypatch.setattr(BlockAllocator, "ensure_writable", spy)
+    rng = np.random.default_rng(4)
+    prefix = rng.integers(1, 256, (17,)).tolist()
+    reqs = lambda: [Request(uid=i, prompt=prefix + [60 + i],  # noqa: E731
+                            max_new_tokens=6, prefix_id="sys")
+                    for i in range(4)]
+    # 2 slots x 3 blocks fills the 6-block arena exactly; the second
+    # wave shares 2 prefix blocks and still fits (1 owned + 1 reserve)
+    serve = ServeConfig(**{**BASE, "max_slots": 2}, block_size=8,
+                        prefill_chunk=8, n_blocks=6)
+    fin, stats = ContinuousEngine(params, cfg, serve).run(reqs())
+    assert len(fin) == 4 and stats.rejected == 0
+    assert cow, "forced COW never fired"
+    # sharing slots reached the COW guard with zero free blocks AND a
+    # pre-claimed reserve: the pre-fix code would have raised OutOfBlocks
+    assert any(free == 0 and r is not None for free, r in calls)
+    # token identity survives the forced copies
+    monkeypatch.setattr(BlockAllocator, "ensure_writable", orig)
+    ref, _ = ContinuousEngine(params, cfg, serve).run(reqs())
+    assert _tokens(fin) == _tokens(ref)
+
+
 def test_admission_backpressure_out_of_blocks(served):
     params, cfg = served
     # arena of 8 blocks, each request needs 4 (16-token cap / bs 4):
@@ -260,10 +369,15 @@ def test_paged_sparse_moe_token_identical(pruned_moe):
     ref, _ = ContinuousEngine(art.params, art.cfg,
                               ServeConfig(**kw)).run(reqs)
     paged = ServeConfig(**kw, block_size=8, prefill_chunk=8)
+    fused = ServeConfig(**kw, block_size=8, prefill_chunk=8,
+                        paged_kernel=True)
     variants = {
         "mem-sparse": ContinuousEngine(art.params, art.cfg, paged,
                                        packed=art.packed),
         "load-sparse": ContinuousEngine.from_artifact(loaded, paged),
+        "mem-sparse-kernel": ContinuousEngine(art.params, art.cfg, fused,
+                                              packed=art.packed),
+        "load-sparse-kernel": ContinuousEngine.from_artifact(loaded, fused),
     }
     for label, eng in variants.items():
         got, stats = eng.run(reqs)

@@ -158,6 +158,76 @@ def test_scheduler_backpressure_holds_policy_head():
     assert len(s.queue) == 2
 
 
+# --------------------------------------------- slo budget engine wiring
+
+def _spy_budget(monkeypatch):
+    """Record every ``n_decoding`` the engine hands the slo policy."""
+    calls = []
+    orig = SLOPolicy.prefill_budget
+
+    def spy(self, n_decoding):
+        calls.append(n_decoding)
+        return orig(self, n_decoding)
+
+    monkeypatch.setattr(SLOPolicy, "prefill_budget", spy)
+    return calls
+
+
+def test_slo_budget_unlimited_while_only_prefilling(monkeypatch):
+    """The engine must hand the policy the *decoding* slot count
+    (``sched.slots``), never total occupancy: three long prompts
+    chunk-prefilling together with nothing decoding see a count of 0
+    every tick, so the slo budget stays unlimited and all three finish
+    prefill on the same tick."""
+    calls = _spy_budget(monkeypatch)
+    cfg = small_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    serve = ServeConfig(max_slots=3, max_seq=32, block_size=8,
+                        prefill_chunk=8, scheduler="slo",
+                        compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    reqs = [Request(uid=u, prompt=[(u * 31 + k) % 250 + 1
+                                   for k in range(20)],
+                    max_new_tokens=4) for u in range(3)]
+    eng = ContinuousEngine(params, cfg, serve)
+    fin, _ = eng.run(reqs, max_burst=1)
+    assert len(fin) == 3
+    # 20-token prompts, 8-token chunks: three pure-prefill ticks, each
+    # reporting zero decoding slots (budget None -> all slots advance)
+    assert calls[:3] == [0, 0, 0]
+    # uncapped prefill: all three start decoding on the same tick —
+    # counting prefilling slots would have throttled them to one chunk
+    # per tick and staggered the starts (calls ramping 1, 2, 3)
+    assert calls[3] == 3
+    assert set(calls[3:]) == {3}
+
+
+def test_slo_budget_counts_decoding_slots_only(monkeypatch):
+    """A slot decoding next to a slot still chunk-prefilling must be
+    reported as ONE decoding slot — reporting total occupancy (2 here)
+    was the bug this pins against."""
+    calls = _spy_budget(monkeypatch)
+    cfg = small_config()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    serve = ServeConfig(max_slots=2, max_seq=32, block_size=8,
+                        prefill_chunk=8, scheduler="slo",
+                        compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    reqs = [Request(uid=0, prompt=[1, 2, 3], max_new_tokens=10),
+            Request(uid=1, prompt=list(range(5, 25)), max_new_tokens=6)]
+    eng = ContinuousEngine(params, cfg, serve)
+    fin, _ = eng.run(reqs, max_burst=1)
+    assert len(fin) == 2
+    # tick 1: both admitted, nothing decoding yet; uid 0 (3-token
+    # prompt) finishes its single chunk and starts decoding.  Ticks
+    # 2-3: uid 1 still chunk-prefilling while uid 0 decodes, so the
+    # policy must see 1 — not 2, the occupied-slot count.
+    assert calls[:3] == [0, 1, 1]
+    # once uid 1 starts too, the count reaches the full pool
+    assert 2 in calls
+    assert max(calls) == 2
+
+
 # ------------------------------------------------------------- fifo pin
 
 @pytest.mark.parametrize("block_size", [None, 8])
