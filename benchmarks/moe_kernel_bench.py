@@ -1,20 +1,26 @@
 """Grouped MoE kernel benchmark: one launch for all experts vs the
-per-expert launch loop vs the dense einsum.
+per-expert launch loop vs the dense einsum — plus the decode-tick
+occupancy payoff of the ragged dispatch.
 
 Runs the MoE smoke config through the full recipe pipeline (wanda_block,
 so every expert weight carries real zero tiles), then times the MoE
 feed-forward — routing, dispatch, and combine included — through the
-three expert-matmul paths. Kernel timings are interpret mode on CPU, so
+expert-matmul paths. Kernel timings are interpret mode on CPU, so
 absolute numbers are not TPU numbers; the reproduction targets are
 
 - launch counts: the grouped path must issue exactly ONE kernel launch
   per projection where the per-expert loop issues E (counted at real
-  dispatch, ``repro.kernels.counters``), and
+  dispatch, ``repro.kernels.counters``),
 - the ordering: grouped >= 1.2x loop tokens/s (dispatch + grid overhead
-  the grouping removes — on TPU the dispatch gap is the whole point).
+  the grouping removes — on TPU the dispatch gap is the whole point),
+- occupancy: at decode batch sizes the experts-computed counters must
+  equal the experts the router actually hit — not E — on BOTH the
+  occupancy-masked grouped launch and the ragged dispatch (with
+  top_k < E, a single-token tick always leaves experts empty).
 
-All three paths must agree to fp32 tolerance; grouped vs loop must be
-bitwise identical (same per-expert accumulation order).
+All paths must agree to fp32 tolerance vs the dense einsum; grouped,
+loop, and ragged must be bitwise identical to each other (same
+per-expert accumulation order).
 """
 from __future__ import annotations
 
@@ -41,9 +47,25 @@ def moe_artifact():
     cfg = get_smoke_config("qwen3-moe-30b-a3b").replace(scan_layers=False)
     params = T.init_model(jax.random.PRNGKey(0), cfg)
     recipe = PruneRecipe(arch=cfg.name, p=0.6, category="unstructured",
-                         selector="wanda_block", block=16,
+                         selector="wanda_block", block=16, ragged_moe=True,
                          calibration=CalibrationSpec(4, 2, 16))
     return MosaicPipeline(recipe).run(params, cfg)
+
+
+def _launches(snap: dict) -> int:
+    """Kernel launches only — the occupancy counters share the registry
+    under ``*_experts_computed`` keys and are not launches."""
+    return sum(v for k, v in snap.items()
+               if not k.endswith("experts_computed"))
+
+
+def _time(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
 
 
 def main(fast: bool = True):
@@ -56,6 +78,7 @@ def main(fast: bool = True):
     x = jax.random.normal(jax.random.PRNGKey(1), (B, S, art.cfg.d_model),
                           jnp.float32)
     n_tokens = B * S
+    reps = 5 if fast else 9
 
     def run_dense():
         y, _ = apply_moe(block_params["moe"], spec, x)
@@ -63,11 +86,11 @@ def main(fast: bool = True):
 
     def run_loop():
         return sparse_apply_moe(block_params, spec, x, art.packed, layer,
-                                group_experts=False)
+                                group_experts=False, ragged_moe=False)
 
     def run_grouped():
         return sparse_apply_moe(block_params, spec, x, art.packed, layer,
-                                group_experts=True)
+                                group_experts=True, ragged_moe=False)
 
     rows = []
     outs = {}
@@ -77,13 +100,8 @@ def main(fast: bool = True):
         outs[name] = fn()                   # warm-up: compile
         counters.reset()
         fn()
-        launches = sum(counters.snapshot().values())
-        ts = []
-        for _ in range(5 if fast else 9):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            ts.append(time.perf_counter() - t0)
-        sec = float(np.median(ts))
+        launches = _launches(counters.snapshot())
+        sec = _time(fn, reps)
         rows.append({"path": name, "ms": sec * 1e3,
                      "tokens_per_s": n_tokens / sec,
                      "launches": launches,
@@ -96,7 +114,58 @@ def main(fast: bool = True):
               for p in ("per_expert_loop", "grouped"))
     exact = bool(jnp.array_equal(outs["per_expert_loop"], outs["grouped"]))
 
-    print(f"moe ffn: E={spec.n_experts} top_k={spec.top_k} "
+    # ------------------------------------- decode tick: occupancy payoff
+    # A single-token decode tick routes exactly top_k experts; with
+    # top_k < E the launch MUST leave the rest uncomputed. The bench
+    # runs eagerly, so the occupancy reaching the counters is concrete.
+    E = spec.n_experts
+    x_dec = jax.random.normal(jax.random.PRNGKey(2), (1, 1, art.cfg.d_model),
+                              jnp.float32)
+    logits = (x_dec.reshape(1, -1) @ block_params["moe"]["router"]
+              ).astype(jnp.float32)
+    routed = int(np.unique(
+        np.asarray(jax.lax.top_k(logits, spec.top_k)[1])).size)
+
+    def run_dec_dense():
+        y, _ = apply_moe(block_params["moe"], spec, x_dec)
+        return y
+
+    def run_dec_grouped():
+        return sparse_apply_moe(block_params, spec, x_dec, art.packed,
+                                layer, group_experts=True, ragged_moe=False)
+
+    def run_dec_ragged():
+        return sparse_apply_moe(block_params, spec, x_dec, art.packed,
+                                layer, ragged_moe=True)
+
+    dec_outs = {}
+    dec_stats = {}
+    for name, fn, launch_key in [
+            ("decode_grouped", run_dec_grouped, "grouped_block_sparse"),
+            ("decode_ragged", run_dec_ragged, "grouped_block_sparse_ragged")]:
+        dec_outs[name] = fn()
+        counters.reset()
+        fn()
+        snap = counters.snapshot()
+        launches = snap.get(launch_key, 0)
+        computed = snap.get(f"{launch_key}_experts_computed", 0)
+        sec = _time(fn, reps)
+        dec_stats[name] = {
+            "launches_per_proj": launches / N_PROJ,
+            "experts_per_launch": computed / max(launches, 1),
+            "tokens_per_s": 1.0 / sec}
+    dec_outs["decode_dense"] = run_dec_dense()
+
+    dec_err = max(float(jnp.abs(dec_outs["decode_dense"] - dec_outs[p]).max())
+                  for p in ("decode_grouped", "decode_ragged"))
+    err = max(err, dec_err)
+    dec_exact = bool(jnp.array_equal(dec_outs["decode_grouped"],
+                                     dec_outs["decode_ragged"]))
+    occupancy_match = all(
+        s["experts_per_launch"] == routed for s in dec_stats.values())
+    empty_skipped = routed < E and occupancy_match
+
+    print(f"moe ffn: E={E} top_k={spec.top_k} "
           f"d_ff={spec.d_ff}, {n_tokens} tokens, "
           f"tile-skip {flop_savings(art.packed):.0%}")
     print(f"{'path':18s} {'tok/s':>10s} {'ms':>8s} {'launches':>9s} "
@@ -106,11 +175,20 @@ def main(fast: bool = True):
               f"{r['launches']:9d} {r['launches_per_proj']:9.1f}")
     print(f"grouped vs per-expert loop: {speedup:.2f}x tokens/s; "
           f"max |dense - sparse| = {err:.1e}; grouped==loop: {exact}")
+    print(f"decode tick (1 token, top_k={spec.top_k}): "
+          f"{routed}/{E} experts routed")
+    for name, s in dec_stats.items():
+        print(f"{name:18s} experts/launch={s['experts_per_launch']:.1f} "
+              f"launches/proj={s['launches_per_proj']:.1f}")
+    print(f"occupancy match: {occupancy_match}; empty experts skipped: "
+          f"{empty_skipped}; ragged==grouped: {dec_exact}")
     if not exact:
         # same accumulation order per expert => must be bitwise equal
         raise AssertionError("grouped kernel diverged from per-expert loop")
+    if not dec_exact:
+        raise AssertionError("ragged dispatch diverged from grouped kernel")
     return {"rows": rows,
-            "n_experts": spec.n_experts,
+            "n_experts": E,
             "grouped_vs_loop": speedup,
             "grouped_launches_per_proj": by["grouped"]["launches_per_proj"],
             "loop_launches_per_proj":
@@ -119,6 +197,20 @@ def main(fast: bool = True):
             "loop_tokens_per_s": by["per_expert_loop"]["tokens_per_s"],
             "dense_tokens_per_s": by["dense_einsum"]["tokens_per_s"],
             "max_err_vs_dense": err,
+            "decode_experts_routed": float(routed),
+            "decode_grouped_experts_per_launch":
+                dec_stats["decode_grouped"]["experts_per_launch"],
+            "decode_ragged_experts_per_launch":
+                dec_stats["decode_ragged"]["experts_per_launch"],
+            "ragged_launches_per_proj":
+                dec_stats["decode_ragged"]["launches_per_proj"],
+            "decode_occupancy_match": float(occupancy_match),
+            "decode_empty_experts_skipped": float(empty_skipped),
+            "decode_paths_identical": float(dec_exact),
+            "decode_grouped_tokens_per_s":
+                dec_stats["decode_grouped"]["tokens_per_s"],
+            "decode_ragged_tokens_per_s":
+                dec_stats["decode_ragged"]["tokens_per_s"],
             "prune_seconds": art.report.get("prune_seconds")}
 
 

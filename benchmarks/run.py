@@ -150,7 +150,10 @@ def _derive(name: str, result) -> str:
             return (f"grouped_vs_loop={result['grouped_vs_loop']:.2f}x"
                     f";launches_per_proj="
                     f"{result['grouped_launches_per_proj']:.0f}vs"
-                    f"{result['loop_launches_per_proj']:.0f}")
+                    f"{result['loop_launches_per_proj']:.0f}"
+                    f";decode_experts="
+                    f"{result['decode_ragged_experts_per_launch']:.0f}"
+                    f"of{result['n_experts']}")
         if name == "paged_attn_bench":
             return (f"kv_bytes_cut={result['kv_bytes_reduction']:.2f}"
                     f";token_identical="
@@ -191,7 +194,13 @@ def _metrics(name: str, result, us: float) -> dict:
                 "grouped_vs_loop", "grouped_launches_per_proj",
                 "loop_launches_per_proj", "grouped_tokens_per_s",
                 "loop_tokens_per_s", "dense_tokens_per_s", "n_experts",
-                "max_err_vs_dense", "prune_seconds")})
+                "max_err_vs_dense", "decode_experts_routed",
+                "decode_grouped_experts_per_launch",
+                "decode_ragged_experts_per_launch",
+                "ragged_launches_per_proj", "decode_occupancy_match",
+                "decode_empty_experts_skipped", "decode_paths_identical",
+                "decode_grouped_tokens_per_s",
+                "decode_ragged_tokens_per_s", "prune_seconds")})
         elif name == "kernel_bench":
             bs, _ = result
             m.update({"skip_frac": bs["skip_frac"],

@@ -104,12 +104,15 @@ def stage_pack(ctx: PipelineContext) -> None:
     ``reason: "non-tileable"`` now; experts are planned, not skipped).
     ``recipe.group_experts`` marks the expert stacks for the grouped
     one-launch kernel (the default serving path) vs the per-expert
-    launch loop; the flag rides inside each plan through the artifact
-    bundle, so rehydrated engines pick the same path with no repacking."""
+    launch loop, ``recipe.ragged_moe`` for the ragged routed-tokens-only
+    dispatch at decode sizes; the flags ride inside each plan through
+    the artifact bundle, so rehydrated engines pick the same path with
+    no repacking."""
     from repro.serve.sparse import pack_model_with_report
     ctx.packed, ctx.pack_report = pack_model_with_report(
         ctx.params, ctx.cfg, block=ctx.recipe.block,
-        group_experts=ctx.recipe.group_experts)
+        group_experts=ctx.recipe.group_experts,
+        ragged_moe=ctx.recipe.ragged_moe)
 
 
 @register_stage("report")

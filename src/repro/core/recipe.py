@@ -40,7 +40,9 @@ class PruneRecipe:
     ``block`` is the block-sparse kernel tile the ``pack`` stage plans
     for; ``group_experts`` marks MoE expert plan stacks for the grouped
     (one-launch-for-all-experts) kernel instead of the per-expert launch
-    loop. ``stages`` is the ordered subset of the stage registry to run.
+    loop; ``ragged_moe`` additionally marks them for the ragged
+    (routed-tokens-only) dispatch at decode batch sizes. ``stages`` is
+    the ordered subset of the stage registry to run.
     """
     arch: str
     p: float
@@ -56,6 +58,7 @@ class PruneRecipe:
     platform: Optional[str] = None
     block: int = 128
     group_experts: bool = True
+    ragged_moe: bool = False
     calibration: CalibrationSpec = CalibrationSpec()
     stages: tuple = DEFAULT_STAGES
 

@@ -6,16 +6,37 @@ dispatches, while a call traced inside an outer ``jax.jit`` counts once
 per trace (the launch structure baked into the compiled program). The
 MoE kernel benchmark uses this to show the grouped kernel issuing one
 launch per projection where the per-expert loop issues E.
+
+Occupancy-aware dispatches additionally record *work* counters —
+``<kernel>_experts_computed`` accumulates how many experts actually got
+tile work per launch (``record_concrete``), so benchmarks can pin
+"experts computed tracks router occupancy, not E". Work counters only
+accumulate when the occupancy value is concrete (eager dispatch); a
+traced value inside an outer ``jax.jit`` is silently skipped — the
+launch structure is still counted, the data-dependent occupancy is not
+knowable at trace time.
 """
 from __future__ import annotations
 
 from collections import Counter
+
+import jax
 
 _LAUNCHES: Counter = Counter()
 
 
 def record(kernel: str, n: int = 1) -> None:
     _LAUNCHES[kernel] += n
+
+
+def record_concrete(kernel: str, value) -> bool:
+    """Accumulate a data-dependent work value (e.g. experts computed in
+    an occupancy-aware launch) when it is concrete. Returns True when
+    recorded, False when ``value`` was a tracer (outer-jit dispatch)."""
+    if isinstance(value, jax.core.Tracer):
+        return False
+    _LAUNCHES[kernel] += int(value)
+    return True
 
 
 def reset() -> None:

@@ -1,4 +1,4 @@
-"""Grouped block-sparse GEMM Pallas TPU kernel — all MoE experts' pruned
+"""Grouped block-sparse GEMM Pallas TPU kernels — all MoE experts' pruned
 projection matmuls in ONE launch (MegaBlocks-style).
 
 The per-expert serving path issues E separate ``block_sparse`` launches
@@ -19,6 +19,27 @@ expert's capacity-slot batch is small at decode time (C·G rows), so the
 x panel stays resident while the grid walks that expert's nonzero
 (K-block, N-block) tiles — each weight tile is then touched exactly
 once per launch instead of once per M-block, the MegaBlocks layout.
+
+Two occupancy-aware refinements on top (router counts prefetched
+alongside the tile plan):
+
+* **Masked grid** (:func:`grouped_block_sparse_matmul` with a ``work``
+  array): a third scalar-prefetch arg ``work (E, M/bm)`` marks which
+  per-expert M-blocks hold any routed token. Dead (expert, M-block)
+  pairs skip the MXU entirely and clamp their x/w index maps to the
+  step-0 block — consecutive grid steps then revisit the same block and
+  the DMA is elided, exactly paged_attention's dead-block idiom. Output
+  blocks are still flushed (zeros), so results are bitwise-identical to
+  the unmasked launch on every row routing later gathers.
+
+* **Ragged grid** (:func:`ragged_block_sparse_matmul`): the E axis
+  leaves the grid entirely. Routed tokens are packed into one
+  contiguous ``(M, K)`` buffer of ``block_m``-aligned per-expert
+  segments, and a prefetched ``tile_expert (M/bm,)`` map (from the
+  cumsum of router counts; ``-1`` = past-the-end padding) tells each
+  M-tile which expert's plan and weights it runs. The grid is
+  (M/bm, N-blocks, max_nnz) — proportional to tokens actually routed,
+  not E·capacity.
 """
 from __future__ import annotations
 
@@ -30,9 +51,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *,
+def _kernel(count_ref, idx_ref, work_ref, x_ref, w_ref, o_ref, acc_ref, *,
             max_nnz: int):
     e = pl.program_id(0)
+    m = pl.program_id(1)
     n = pl.program_id(2)
     s = pl.program_id(3)
 
@@ -40,7 +62,7 @@ def _kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(s < count_ref[e, n])
+    @pl.when((s < count_ref[e, n]) & (work_ref[e, m] > 0))
     def _accum():
         acc_ref[...] += jnp.dot(x_ref[0], w_ref[0],
                                 preferred_element_type=jnp.float32)
@@ -52,6 +74,7 @@ def _kernel(count_ref, idx_ref, x_ref, w_ref, o_ref, acc_ref, *,
 
 def grouped_block_sparse_matmul(x: jax.Array, w: jax.Array,
                                 counts: jax.Array, indices: jax.Array, *,
+                                work: jax.Array | None = None,
                                 block_m: int = 128, block_k: int = 128,
                                 block_n: int = 128,
                                 interpret: bool = False) -> jax.Array:
@@ -62,7 +85,10 @@ def grouped_block_sparse_matmul(x: jax.Array, w: jax.Array,
     w: (E, K, N) — expert weight stack (zeros in pruned blocks);
     counts: (E, N/bn) int32 — nonzero K-blocks per expert/block-column;
     indices: (E, N/bn, max_nnz) int32 — their K-block ids (edge-padded to
-    the shared max_nnz so the stack is rectangular).
+    the shared max_nnz so the stack is rectangular);
+    work: optional (E, M/bm) int32 — occupancy per (expert, M-block);
+    zero entries skip compute and elide DMAs (their output blocks flush
+    as zeros). None computes every block (all-occupied).
     """
     E, M, K = x.shape
     E2, K2, N = w.shape
@@ -70,24 +96,111 @@ def grouped_block_sparse_matmul(x: jax.Array, w: jax.Array,
     assert M % block_m == 0 and K % block_k == 0 and N % block_n == 0
     assert counts.shape == (E, N // block_n)
     max_nnz = indices.shape[-1]
+    if work is None:
+        work = jnp.ones((E, M // block_m), jnp.int32)
+    assert work.shape == (E, M // block_m)
+
+    def x_map(e, m, n, s, cnt, idx, wrk):
+        # dead (e, m)-blocks pin the K-block to the step-0 one so every
+        # later step revisits it and the DMA is elided
+        return (e, m, jnp.where(wrk[e, m] > 0, idx[e, n, s], idx[e, n, 0]))
+
+    def w_map(e, m, n, s, cnt, idx, wrk):
+        return (e, jnp.where(wrk[e, m] > 0, idx[e, n, s], idx[e, n, 0]), n)
 
     grid = (E, M // block_m, N // block_n, max_nnz)
     kernel = functools.partial(_kernel, max_nnz=max_nnz)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, block_m, block_k),
-                             lambda e, m, n, s, cnt, idx: (e, m, idx[e, n, s])),
-                pl.BlockSpec((1, block_k, block_n),
-                             lambda e, m, n, s, cnt, idx: (e, idx[e, n, s], n)),
+                pl.BlockSpec((1, block_m, block_k), x_map),
+                pl.BlockSpec((1, block_k, block_n), w_map),
             ],
             out_specs=pl.BlockSpec((1, block_m, block_n),
-                                   lambda e, m, n, s, cnt, idx: (e, m, n)),
+                                   lambda e, m, n, s, cnt, idx, wrk:
+                                   (e, m, n)),
             scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
         interpret=interpret,
-    )(counts, indices, x, w)
+    )(counts, indices, work, x, w)
+
+
+def _ragged_kernel(count_ref, idx_ref, tile_ref, x_ref, w_ref, o_ref,
+                   acc_ref, *, max_nnz: int):
+    t = pl.program_id(0)
+    n = pl.program_id(1)
+    s = pl.program_id(2)
+    e = tile_ref[t]
+    ec = jnp.maximum(e, 0)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((e >= 0) & (s < count_ref[ec, n]))
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(s == max_nnz - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def ragged_block_sparse_matmul(x: jax.Array, w: jax.Array,
+                               counts: jax.Array, indices: jax.Array,
+                               tile_expert: jax.Array, *,
+                               block_m: int = 16, block_k: int = 128,
+                               block_n: int = 128,
+                               interpret: bool = False) -> jax.Array:
+    """y = x @ w[tile_expert] over a ragged expert-packed batch, one
+    launch, grid proportional to routed tokens instead of E·capacity.
+
+    x: (M, K) — routed tokens packed into ``block_m``-aligned per-expert
+    segments (the MegaBlocks layout; rows past an expert's count are
+    zero padding inside its last tile);
+    w: (E, K, N) — expert weight stack;
+    counts / indices: the stacked tile plan (as in
+    :func:`grouped_block_sparse_matmul`);
+    tile_expert: (M/bm,) int32 — which expert owns each M-tile, ``-1``
+    for dead tiles past the packed total (skipped: no MXU work, index
+    maps clamped so their DMAs are elided, output flushed as zeros).
+    """
+    M, K = x.shape
+    E, K2, N = w.shape
+    assert K == K2
+    assert M % block_m == 0 and K % block_k == 0 and N % block_n == 0
+    assert counts.shape == (E, N // block_n)
+    assert tile_expert.shape == (M // block_m,)
+    max_nnz = indices.shape[-1]
+
+    def x_map(t, n, s, cnt, idx, te):
+        ec = jnp.maximum(te[t], 0)
+        return (t, jnp.where(te[t] >= 0, idx[ec, n, s], idx[ec, n, 0]))
+
+    def w_map(t, n, s, cnt, idx, te):
+        ec = jnp.maximum(te[t], 0)
+        return (ec, jnp.where(te[t] >= 0, idx[ec, n, s], idx[ec, n, 0]), n)
+
+    grid = (M // block_m, N // block_n, max_nnz)
+    kernel = functools.partial(_ragged_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), x_map),
+                pl.BlockSpec((1, block_k, block_n), w_map),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda t, n, s, cnt, idx, te: (t, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(counts, indices, tile_expert, x, w)

@@ -16,3 +16,28 @@ def grouped_block_sparse_matmul_ref(x: jax.Array, w: jax.Array,
                       block_n, axis=2)
     return jnp.einsum("emk,ekn->emn", x, jnp.where(mask, w,
                                                    jnp.zeros_like(w)))
+
+
+def ragged_block_sparse_matmul_ref(x: jax.Array, w: jax.Array,
+                                   tile_expert, block_m: int,
+                                   block_masks: jax.Array, block_k: int,
+                                   block_n: int) -> jax.Array:
+    """Oracle for the ragged kernel: each ``block_m``-row tile of the
+    packed buffer times its owning expert's (mask-zeroed) weight; dead
+    tiles (``tile_expert < 0``) produce zero rows.
+
+    x: (M, K); w: (E, K, N); tile_expert: (M/bm,);
+    block_masks: (E, K/bk, N/bn).
+    """
+    mask = jnp.repeat(jnp.repeat(block_masks, block_k, axis=1),
+                      block_n, axis=2)
+    wm = jnp.where(mask, w, jnp.zeros_like(w))
+    tiles = []
+    for t in range(x.shape[0] // block_m):
+        e = int(tile_expert[t])
+        xt = x[t * block_m:(t + 1) * block_m]
+        if e < 0:
+            tiles.append(jnp.zeros((block_m, w.shape[2]), x.dtype))
+        else:
+            tiles.append(xt @ wm[e])
+    return jnp.concatenate(tiles, axis=0)

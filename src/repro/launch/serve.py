@@ -125,6 +125,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
     from repro.serve.gateway import Gateway, plan_placement
 
     group = False if args.no_group_experts else None
+    ragged = True if args.ragged_moe else None
     max_seq = args.prompt_len + args.new_tokens
     if args.block_size:
         max_seq = -(-max_seq // args.block_size) * args.block_size
@@ -140,6 +141,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
         serve_cfg = dataclasses.replace(place.serve,
                                         compute_dtype=jnp.float32,
                                         group_experts=group,
+                                        ragged_moe=ragged,
                                         paged_kernel=args.paged_kernel)
         print(f"placement: weights {place.weights_bytes} B "
               f"(density {place.density:.0%}), KV "
@@ -155,6 +157,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
                                 compute_dtype=jnp.float32,
                                 cache_dtype=jnp.float32,
                                 group_experts=group,
+                                ragged_moe=ragged,
                                 paged_kernel=args.paged_kernel,
                                 scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
@@ -206,6 +209,10 @@ def main() -> None:
     ap.add_argument("--no-group-experts", action="store_true",
                     help="fall back to one block-sparse launch per MoE "
                          "expert instead of the grouped one-launch kernel")
+    ap.add_argument("--ragged-moe", action="store_true",
+                    help="MoE decode ticks: pack only routed tokens into "
+                         "ragged expert batches (skips empty experts) "
+                         "instead of full capacity-slot batches")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--block-size", type=int, default=None, metavar="N",
                     help="continuous engine: page the KV cache into "
@@ -252,6 +259,7 @@ def main() -> None:
 
     max_seq = args.prompt_len + args.new_tokens
     group = False if args.no_group_experts else None
+    ragged = True if args.ragged_moe else None
     if args.engine == "static":
         if args.block_size:
             print("note: --block-size is a continuous-engine flag; "
@@ -259,7 +267,8 @@ def main() -> None:
         serve_cfg = ServeConfig(max_seq=max_seq,
                                 compute_dtype=jnp.float32,
                                 cache_dtype=jnp.float32,
-                                group_experts=group)
+                                group_experts=group,
+                                ragged_moe=ragged)
         eng = Engine(params, cfg, serve_cfg, packed=packed)
         prompt = jnp.asarray(
             corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
@@ -294,6 +303,7 @@ def main() -> None:
                             prefill_chunk=args.prefill_chunk,
                             compute_dtype=jnp.float32,
                             cache_dtype=jnp.float32, group_experts=group,
+                            ragged_moe=ragged,
                             paged_kernel=args.paged_kernel,
                             scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)

@@ -4,6 +4,19 @@ Gather/scatter dispatch with fixed per-expert capacity so the whole layer is
 a static-shape einsum program that XLA GSPMD can partition: experts shard
 over the ``model`` mesh axis (all-to-alls inserted automatically), tokens
 over ``data``.
+
+Serving adds two occupancy-aware dispatch shapes on top (selected via
+the ``expert_group_linear`` / ``expert_ragged_linear`` hooks):
+
+* the grouped (capacity-slot) path threads per-(group, expert) kept
+  counts to its hook as a ``row_live`` mask so the grouped kernel can
+  skip experts with zero routed tokens and padded capacity slots;
+* the ragged (MegaBlocks-style) path drops capacity slots entirely —
+  :func:`build_ragged_dispatch` packs only routed tokens into a
+  contiguous buffer of ``RAGGED_BLOCK_ROWS``-aligned per-expert
+  segments (offsets from a cumsum of router counts), with a static
+  :func:`ragged_rows_bound` row budget so the program stays
+  fixed-shape under jit.
 """
 from __future__ import annotations
 
@@ -38,7 +51,12 @@ def init_moe(key: jax.Array, d_model: int, spec: MoESpec, dtype=jnp.float32) -> 
 
 
 def capacity(spec: MoESpec, n_tokens: int) -> int:
-    c = int(math.ceil(spec.capacity_factor * spec.top_k * n_tokens / spec.n_experts))
+    """Per-expert dispatch slots. Clamped to >= 1 *before* the sublane
+    rounding: at tiny decode batches (or extreme capacity_factor / E
+    combos) ``capacity_factor * top_k * n_tokens / n_experts`` rounds
+    toward zero, and a zero capacity would silently drop every token."""
+    c = max(1, int(math.ceil(
+        spec.capacity_factor * spec.top_k * n_tokens / spec.n_experts)))
     return max(4, ((c + 3) // 4) * 4)
 
 
@@ -50,8 +68,64 @@ def n_groups(B: int, S: int) -> int:
     return B
 
 
+# M-tile height of the ragged expert-packed buffer: per-expert segments
+# start on multiples of this so every ragged-kernel tile belongs to
+# exactly one expert. Matches the kernel ops' RAGGED_BLOCK_ROWS (one
+# sublane tile).
+RAGGED_BLOCK_ROWS = 16
+
+
+def ragged_rows_bound(n_experts: int, n_assign: int) -> int:
+    """Static row budget for the ragged packed buffer: ``n_assign`` kept
+    assignments at most, plus up to ``RAGGED_BLOCK_ROWS - 1`` alignment
+    padding rows for each expert that can be non-empty, rounded up to a
+    whole tile. Static in (E, top_k, tokens) so jit never retraces on
+    occupancy."""
+    A = RAGGED_BLOCK_ROWS
+    m = n_assign + min(n_experts, n_assign) * (A - 1)
+    return ((m + A - 1) // A) * A
+
+
+def build_ragged_dispatch(flat_ids: jax.Array, keep: jax.Array,
+                          pos: jax.Array, n_experts: int, m_max: int):
+    """Layout of the ragged (MegaBlocks-style) expert batch.
+
+    flat_ids / keep / pos: (G, s*K) per-group router assignments —
+    expert id, capacity-kept mask, and within-(group, expert) position.
+    Returns ``(dest, tile_expert, counts_e)``:
+
+    * ``dest (G, s*K)`` — packed-buffer row of each assignment (the
+      dump row ``m_max`` for capacity-dropped ones). Within expert
+      ``e``, group ``g``'s kept rows land at
+      ``offset[e] + sum_{g'<g} counts[g', e] + pos`` — contiguous per
+      expert, group-major, in capacity order, so the layout is a pure
+      function of the routing (not of arrival order).
+    * ``tile_expert (m_max / RAGGED_BLOCK_ROWS,)`` — owning expert per
+      M-tile via searchsorted over the aligned cumsum offsets; ``-1``
+      past the packed total.
+    * ``counts_e (E,)`` — kept assignments per expert (the router
+      counts whose cumsum drives the offsets).
+    """
+    A = RAGGED_BLOCK_ROWS
+    onehot = jax.nn.one_hot(flat_ids, n_experts, dtype=jnp.int32)
+    kept = onehot * keep[..., None].astype(jnp.int32)
+    count_ge = kept.sum(axis=1)                         # (G, E)
+    inter = jnp.cumsum(count_ge, axis=0) - count_ge     # rows from earlier groups
+    counts_e = count_ge.sum(axis=0)                     # (E,)
+    seg = ((counts_e + A - 1) // A) * A                 # tile-aligned segments
+    ends = jnp.cumsum(seg)
+    off = ends - seg                                    # (E,) segment starts
+    inter_gi = jnp.take_along_axis(inter, flat_ids, axis=1)
+    dest = jnp.where(keep, off[flat_ids] + inter_gi + pos, m_max)
+    tile_starts = jnp.arange(m_max // A, dtype=jnp.int32) * A
+    e_t = jnp.searchsorted(ends, tile_starts, side="right")
+    tile_expert = jnp.where(e_t < n_experts, e_t, -1).astype(jnp.int32)
+    return dest, tile_expert, counts_e
+
+
 def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
-              expert_linear=None, expert_group_linear=None):
+              expert_linear=None, expert_group_linear=None,
+              expert_ragged_linear=None):
     """x: (B, S, d). Returns (y, aux_loss).
 
     Grouped capacity dispatch (GShard/T5X style): tokens are routed within
@@ -64,18 +138,29 @@ def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
     path runs each expert's slot batch through that expert's tile plan
     here, one kernel launch per expert.
 
-    ``expert_group_linear``: optional ``(name, xs, ws) -> ys`` override
-    for the *stacked* expert matmuls (``xs``: (E, G·C, d) all experts'
-    flattened dispatch slots, ``ws``: the (E, d_in, d_out) weight stack)
-    — the grouped block-sparse kernel executes all E experts in ONE
-    launch here. Takes precedence over ``expert_linear`` when both are
-    given.
+    ``expert_group_linear``: optional ``(name, xs, ws, row_live) -> ys``
+    override for the *stacked* expert matmuls (``xs``: (E, G·C, d) all
+    experts' flattened dispatch slots, ``ws``: the (E, d_in, d_out)
+    weight stack, ``row_live``: (E, G·C) bool — which slots hold a
+    routed token, from the router's kept counts) — the grouped
+    block-sparse kernel executes all E experts in ONE launch here,
+    skipping experts/slot-blocks ``row_live`` marks empty. Takes
+    precedence over ``expert_linear`` when both are given.
 
-    All E experts compute over their capacity slots on every path
-    (exactly like the stacked einsum); the overrides save zero tiles,
-    not expert selection. The default path is the stacked einsum (and
-    the only path that feeds the calibration taps, which profile the
-    dense model).
+    ``expert_ragged_linear``: optional ``(name, xp, ws, tile_expert) ->
+    yp`` override taking a *ragged* expert batch instead of capacity
+    slots: ``xp (m_max, d_in)`` packs only routed tokens into
+    tile-aligned per-expert segments (see :func:`build_ragged_dispatch`)
+    and ``tile_expert`` names each M-tile's owner. Compute is
+    proportional to tokens actually routed, not E·capacity. Highest
+    precedence of the three.
+
+    Every path computes each routed token's expert matmuls with the same
+    per-row dot products and combine weights, so outputs are
+    bitwise-identical across dense / loop / grouped / ragged; the
+    grouped and ragged overrides additionally *skip* unoccupied work.
+    The default path is the stacked einsum (and the only path that feeds
+    the calibration taps, which profile the dense model).
     """
     dtype = x.dtype
     B, S, d = x.shape
@@ -103,64 +188,107 @@ def apply_moe(params: dict, spec: MoESpec, x: jax.Array,
     keep = pos < C
     slot = jnp.where(keep, flat_ids * C + pos, E * C)       # drop -> last
 
-    # Dispatch: per-group scatter into (G, E*C+1, d) slot buffers.
     src = jnp.repeat(xg, K, axis=1)                         # (G, sK, d)
-    buf = jax.vmap(lambda sl, sr: jnp.zeros((E * C + 1, d), dtype)
-                   .at[sl].add(sr))(slot, src)
-    slots = buf[:, :E * C].reshape(G, E, C, d)
-    slots = hint(slots, "batch", "experts", None, None)
 
-    # Expert FFN on (G, E, C, d)
-    if expert_group_linear is not None:
-        # stacked-expert matmul override (grouped block-sparse serving):
-        # all E experts' slot batches run through one kernel launch
-        xs = slots.transpose(1, 0, 2, 3).reshape(E, G * C, d)
-        up = expert_group_linear("up", xs, params["up"].astype(dtype))
+    if expert_ragged_linear is not None:
+        # Ragged dispatch: pack only routed tokens, no capacity slots.
+        m_max = ragged_rows_bound(E, G * s * K)
+        dest, tile_expert, _ = build_ragged_dispatch(flat_ids, keep, pos,
+                                                     E, m_max)
+        flat_dest = dest.reshape(-1)
+        xp = (jnp.zeros((m_max + 1, d), dtype)
+              .at[flat_dest].add(src.reshape(-1, d)))[:m_max]
+        up = expert_ragged_linear("up", xp, params["up"].astype(dtype),
+                                  tile_expert)
         if spec.gated:
-            g = activation(spec.act, expert_group_linear(
-                "gate", xs, params["gate"].astype(dtype)))
+            g = activation(spec.act, expert_ragged_linear(
+                "gate", xp, params["gate"].astype(dtype), tile_expert))
             h = g * up
         else:
             h = activation(spec.act, up)
-        out = expert_group_linear("down", h, params["down"].astype(dtype))
-        out_slots = out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
-    elif expert_linear is None:
-        tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
-        up = jnp.einsum("gecd,edf->gecf", slots, params["up"].astype(dtype))
-        if spec.gated:
-            g = activation(spec.act, jnp.einsum(
-                "gecd,edf->gecf", slots, params["gate"].astype(dtype)))
-            h = g * up
-        else:
-            h = activation(spec.act, up)
-        tap("moe_down", h, channel_axes=(1, 3), expert_first=True)
-        out_slots = jnp.einsum("gecf,efd->gecd", h,
-                               params["down"].astype(dtype))
+        out = expert_ragged_linear("down", h, params["down"].astype(dtype),
+                                   tile_expert)
+        # Combine: dropped assignments carry dest == m_max, one past the
+        # packed buffer, so take's fill handles them. (A -1 sentinel
+        # would silently WRAP to the last row — jnp.take only fills for
+        # indices >= n.)
+        gathered = jnp.take(out, dest.reshape(-1), axis=0, mode="fill",
+                            fill_value=0)
+        gathered = gathered.reshape(G, s, K, d)
     else:
-        # per-expert matmul override (block-sparse serving): each expert's
-        # C-slot batch runs through its own kernel plan
-        outs = []
-        for e in range(E):
-            xe = slots[:, e].reshape(G * C, d)
-            up = expert_linear("up", e, xe, params["up"][e].astype(dtype))
+        # Dispatch: per-group scatter into (G, E*C+1, d) slot buffers.
+        buf = jax.vmap(lambda sl, sr: jnp.zeros((E * C + 1, d), dtype)
+                       .at[sl].add(sr))(slot, src)
+        slots = buf[:, :E * C].reshape(G, E, C, d)
+        slots = hint(slots, "batch", "experts", None, None)
+
+        # Expert FFN on (G, E, C, d)
+        if expert_group_linear is not None:
+            # stacked-expert matmul override (grouped block-sparse
+            # serving): all E experts' slot batches run through one
+            # kernel launch, with router occupancy marking live slots
+            count_ge = (onehot * keep[..., None].astype(jnp.int32)
+                        ).sum(axis=1)                       # (G, E)
+            row_live = (jnp.arange(C)[None, None, :]
+                        < count_ge.T[:, :, None])           # (E, G, C)
+            row_live = row_live.reshape(E, G * C)
+            xs = slots.transpose(1, 0, 2, 3).reshape(E, G * C, d)
+            up = expert_group_linear("up", xs, params["up"].astype(dtype),
+                                     row_live)
             if spec.gated:
-                g = activation(spec.act, expert_linear(
-                    "gate", e, xe, params["gate"][e].astype(dtype)))
+                g = activation(spec.act, expert_group_linear(
+                    "gate", xs, params["gate"].astype(dtype), row_live))
                 h = g * up
             else:
                 h = activation(spec.act, up)
-            out = expert_linear("down", e, h,
-                                params["down"][e].astype(dtype))
-            outs.append(out.reshape(G, C, d))
-        out_slots = jnp.stack(outs, axis=1)
-    out_slots = hint(out_slots, "batch", "experts", None, None)
+            out = expert_group_linear("down", h,
+                                      params["down"].astype(dtype),
+                                      row_live)
+            out_slots = out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+        elif expert_linear is None:
+            tap("moe_in", slots, channel_axes=(1, 3), expert_first=True)
+            up = jnp.einsum("gecd,edf->gecf", slots,
+                            params["up"].astype(dtype))
+            if spec.gated:
+                g = activation(spec.act, jnp.einsum(
+                    "gecd,edf->gecf", slots, params["gate"].astype(dtype)))
+                h = g * up
+            else:
+                h = activation(spec.act, up)
+            tap("moe_down", h, channel_axes=(1, 3), expert_first=True)
+            out_slots = jnp.einsum("gecf,efd->gecd", h,
+                                   params["down"].astype(dtype))
+        else:
+            # per-expert matmul override (block-sparse serving): each
+            # expert's C-slot batch runs through its own kernel plan
+            outs = []
+            for e in range(E):
+                xe = slots[:, e].reshape(G * C, d)
+                up = expert_linear("up", e, xe,
+                                   params["up"][e].astype(dtype))
+                if spec.gated:
+                    g = activation(spec.act, expert_linear(
+                        "gate", e, xe, params["gate"][e].astype(dtype)))
+                    h = g * up
+                else:
+                    h = activation(spec.act, up)
+                out = expert_linear("down", e, h,
+                                    params["down"][e].astype(dtype))
+                outs.append(out.reshape(G, C, d))
+            out_slots = jnp.stack(outs, axis=1)
+        out_slots = hint(out_slots, "batch", "experts", None, None)
 
-    # Combine: per-group gather; dropped assignments contribute 0.
-    flat_out = out_slots.reshape(G, E * C, d)
-    gathered = jax.vmap(lambda fo, sl: jnp.take(
-        fo, sl, axis=0, mode="fill", fill_value=0))(
-        flat_out, jnp.where(keep, slot, -1))                # (G, sK, d)
-    gathered = gathered.reshape(G, s, K, d)
+        # Combine: per-group gather; dropped assignments contribute 0.
+        # ``slot`` is already E*C (one past flat_out) for dropped rows,
+        # which take's fill mode zeroes; never remap drops to -1 — fill
+        # mode only catches indices >= n, so -1 would WRAP to the last
+        # expert's last capacity slot and leak that token's output into
+        # every dropped assignment.
+        flat_out = out_slots.reshape(G, E * C, d)
+        gathered = jax.vmap(lambda fo, sl: jnp.take(
+            fo, sl, axis=0, mode="fill", fill_value=0))(
+            flat_out, slot)                                 # (G, sK, d)
+        gathered = gathered.reshape(G, s, K, d)
     y = jnp.einsum("gskd,gsk->gsd", gathered, gate_vals.astype(dtype))
 
     if "shared" in params:

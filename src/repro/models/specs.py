@@ -178,8 +178,8 @@ def config_from_dict(d: dict) -> ModelConfig:
 
 def scaled_down(cfg: ModelConfig, *, d_model: int = 64, head_dim: int = 16,
                 d_ff: int = 128, vocab: int = 512, n_periods: int = 1,
-                n_experts: Optional[int] = None, d_state: int = 16,
-                max_q: int = 4) -> ModelConfig:
+                n_experts: Optional[int] = None, top_k: Optional[int] = None,
+                d_state: int = 16, max_q: int = 4) -> ModelConfig:
     """Reduced config of the same family, for CPU smoke tests."""
     def shrink_mixer(m: MixerSpec) -> MixerSpec:
         if isinstance(m, AttentionSpec):
@@ -197,8 +197,12 @@ def scaled_down(cfg: ModelConfig, *, d_model: int = 64, head_dim: int = 16,
             return None
         if isinstance(f, MoESpec):
             ne = n_experts or min(f.n_experts, 4)
+            # keep top_k < n_experts so smoke configs can exercise
+            # empty-expert paths (full-size configs have top_k << E;
+            # top_k == E would make every expert always occupied)
+            tk = top_k or min(f.top_k, max(1, ne // 2))
             return dataclasses.replace(
-                f, n_experts=ne, top_k=min(f.top_k, ne), d_ff=d_ff)
+                f, n_experts=ne, top_k=min(tk, ne), d_ff=d_ff)
         return dataclasses.replace(f, d_ff=d_ff)
 
     pattern = tuple(

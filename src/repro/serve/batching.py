@@ -210,7 +210,8 @@ class ContinuousEngine:
         # here (host-side ring buffers; the gateway's /metrics source)
         self.metrics = MetricsRegistry()
         mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
-                                           serve.group_experts)
+                                           serve.group_experts,
+                                           serve.ragged_moe)
                      if packed else None)
         if serve.paged:
             self._prefill = jax.jit(make_paged_prefill_step(

@@ -44,6 +44,9 @@ class ServeConfig:
     #                                 prefill per prompt
     group_experts: Optional[bool] = None  # MoE: grouped one-launch
     #                                 kernel (None follows plan flags)
+    ragged_moe: Optional[bool] = None  # MoE: ragged (routed-tokens-only)
+    #                                 dispatch at decode batch sizes
+    #                                 (None follows plan flags)
     paged_kernel: bool = False      # paged decode: fused Pallas
     #                                 paged-attention kernel instead of
     #                                 the gather path (needs block_size)

@@ -27,19 +27,23 @@ from repro.serve.config import ServeConfig
 
 
 def make_sparse_mlp_apply(packed: dict, interpret: bool = True,
-                          group_experts: Optional[bool] = None):
+                          group_experts: Optional[bool] = None,
+                          ragged_moe: Optional[bool] = None):
     """`mlp_apply` hook routing FFN layers through the block-sparse
     kernels wherever ``packed`` (from ``sparse.pack_model``) has a plan —
     dense MLPs per projection, MoE layers via their per-expert plan
     stacks: one grouped launch for all experts by default
     (``group_experts=None`` follows each plan's own ``group`` flag),
-    E per-expert launches with ``group_experts=False``."""
+    E per-expert launches with ``group_experts=False``, and — with
+    ``ragged_moe`` (None follows each plan's ``ragged`` flag) — the
+    ragged routed-tokens-only dispatch at decode batch sizes."""
     from repro.serve.sparse import sparse_apply_ffn
 
     def mlp_apply(block_params, spec, x, layer):
         return sparse_apply_ffn(block_params, spec, x, packed, layer,
                                 interpret=interpret,
-                                group_experts=group_experts)
+                                group_experts=group_experts,
+                                ragged_moe=ragged_moe)
     return mlp_apply
 
 
@@ -153,7 +157,8 @@ class Engine:
         self.max_seq = serve.max_seq
         self.cache_dtype = serve.cache_dtype
         mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
-                                           serve.group_experts)
+                                           serve.group_experts,
+                                           serve.ragged_moe)
                      if packed else None)
         self.prefill_step = jax.jit(
             make_prefill_step(cfg, serve.compute_dtype, mlp_apply))

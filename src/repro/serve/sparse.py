@@ -49,13 +49,16 @@ class PackedExpertProjection:
     ``group`` selects the serving path: True (default) executes all E
     experts' matmuls in ONE grouped kernel launch straight off this
     stack; False falls back to E per-expert ``block_sparse`` launches
-    through the :meth:`expert` views."""
+    through the :meth:`expert` views. ``ragged`` additionally opts
+    decode-sized batches into the ragged (routed-tokens-only) kernel
+    variant — the same stacked plan drives both."""
     counts: jax.Array          # (E, N/bn)
     indices: jax.Array         # (E, N/bn, max_nnz)
     block: int
     density: float             # mean nonzero-tile fraction over experts
     densities: tuple           # per-expert nonzero-tile fractions
     group: bool = True         # serve via the grouped (one-launch) kernel
+    ragged: bool = False       # ragged dispatch for decode-sized batches
 
     @property
     def n_experts(self) -> int:
@@ -81,7 +84,8 @@ def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
                             density=float(bm.mean()))
 
 
-def pack_expert_projection(w, block: int = 128, group: bool = True
+def pack_expert_projection(w, block: int = 128, group: bool = True,
+                           ragged: bool = False
                            ) -> Optional[PackedExpertProjection]:
     """Per-expert block plans for an ``(E, K, ...)`` MoE weight. Each
     expert's 2-D fold is planned independently; index rows are padded to
@@ -105,11 +109,12 @@ def pack_expert_projection(w, block: int = 128, group: bool = True
     return PackedExpertProjection(
         counts=jnp.asarray(counts), indices=jnp.asarray(indices),
         block=block, density=float(np.mean(densities)),
-        densities=tuple(densities), group=group)
+        densities=tuple(densities), group=group, ragged=ragged)
 
 
 def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
-                           group_experts: bool = True) -> tuple:
+                           group_experts: bool = True,
+                           ragged_moe: bool = False) -> tuple:
     """Returns ``(packed, report)``: ``{(layer, name): PackedProjection}``
     for every tileable projection, plus a summary of what was *not*
     packed (the silent-``None`` paths), so serve-time coverage is
@@ -122,7 +127,8 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
         w = tree_get(params, proj.path)
         n = int(np.prod(w.shape))
         if proj.expert_axis is not None:
-            p = pack_expert_projection(w, block, group=group_experts)
+            p = pack_expert_projection(w, block, group=group_experts,
+                                       ragged=ragged_moe)
         else:
             p = pack_projection(w, block)
         if p is None:
@@ -136,6 +142,7 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
     report = {
         "block": block,
         "group_experts": group_experts,
+        "ragged_moe": ragged_moe,
         "n_packed": len(packed),
         "n_expert_packed": n_expert,
         "packed_params": packed_params,
@@ -154,13 +161,14 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
 
 
 def pack_model(params, cfg: ModelConfig, block: int = 128,
-               group_experts: bool = True) -> dict:
+               group_experts: bool = True, ragged_moe: bool = False) -> dict:
     """{(layer, name): PackedProjection | PackedExpertProjection} for
     every tileable projection (MoE expert weights get per-expert plan
     stacks). Skipped (non-tileable) projections are logged; use
     :func:`pack_model_with_report` to get the summary programmatically."""
     packed, _ = pack_model_with_report(params, cfg, block,
-                                       group_experts=group_experts)
+                                       group_experts=group_experts,
+                                       ragged_moe=ragged_moe)
     return packed
 
 
@@ -205,12 +213,14 @@ def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
 
 
 def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
-                          interpret: bool = True):
+                          interpret: bool = True, row_live=None):
     """y[e] = x[e] @ w[e] for all experts in ONE grouped kernel launch.
     xs: (E, M, K); ws: (E, K, ...) — trailing dims folded to N. Decode-
     sized slot batches keep the whole M panel resident per expert
     (``block_m=None``); prefill-sized batches fall back to tiling M by
-    the plan block."""
+    the plan block. ``row_live`` ((E, M) bool, optional): router
+    occupancy — experts/M-blocks with no live row skip compute inside
+    the launch (outputs for live rows are bitwise-unchanged)."""
     from repro.kernels.grouped_block_sparse.ops import (
         PANEL_ROWS_MAX, grouped_blocksparse_matmul)
     E, M, K = xs.shape
@@ -221,19 +231,53 @@ def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
     pad_m = (-M) % (16 if M <= PANEL_ROWS_MAX else bm)
     if pad_m:
         xs = jnp.pad(xs, ((0, 0), (0, pad_m), (0, 0)))
+        if row_live is not None:
+            row_live = jnp.pad(row_live, ((0, 0), (0, pad_m)))
     block_m = None if M <= PANEL_ROWS_MAX else bm
     y = grouped_blocksparse_matmul(xs, ws.reshape(E, K, -1), packed.counts,
                                    packed.indices, block_m=block_m,
                                    block_k=bm, block_n=bm,
-                                   interpret=interpret)
+                                   interpret=interpret, row_live=row_live)
     if pad_m:
         y = y[:, :M]
     return y
 
 
+def ragged_sparse_linear(xp, ws, tile_expert,
+                         packed: PackedExpertProjection,
+                         interpret: bool = True):
+    """The ragged expert batch through the stacked tile plan in one
+    launch. xp: (M, K) routed tokens packed into tile-aligned per-expert
+    segments (M is already a multiple of the ragged tile height — the
+    builder's static bound guarantees it); ws: (E, K, ...) — trailing
+    dims folded to N; tile_expert: (M / RAGGED_BLOCK_ROWS,) owner map,
+    -1 on dead padding tiles (skipped inside the kernel)."""
+    from repro.kernels.grouped_block_sparse.ops import (
+        RAGGED_BLOCK_ROWS, ragged_blocksparse_matmul)
+    M, K = xp.shape
+    E = ws.shape[0]
+    bm = packed.block
+    assert M % RAGGED_BLOCK_ROWS == 0
+    return ragged_blocksparse_matmul(xp, ws.reshape(E, K, -1),
+                                     packed.counts, packed.indices,
+                                     tile_expert,
+                                     block_m=RAGGED_BLOCK_ROWS,
+                                     block_k=bm, block_n=bm,
+                                     interpret=interpret)
+
+
+# Largest token count (B*S at the layer input) served through the
+# ragged kernel: decode ticks qualify, prefill-sized batches fall back
+# to the grouped capacity-slot launch (whose resident-panel layout wins
+# once most experts are occupied anyway). Static per trace — selection
+# never retraces on occupancy, only on batch shape like everything else.
+RAGGED_TOKENS_MAX = 64
+
+
 def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
                      layer: int, interpret: bool = True,
-                     group_experts: Optional[bool] = None):
+                     group_experts: Optional[bool] = None,
+                     ragged_moe: Optional[bool] = None):
     """MoE feed-forward with the expert matmuls run through the
     block-sparse kernels under the layer's per-expert plan stacks.
     Routing, dispatch, and combine are ``moe.apply_moe``'s own (shared
@@ -243,9 +287,17 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
     flag (set by the pack stage from ``PruneRecipe.group_experts``):
     True executes all E experts in one grouped kernel launch per
     projection, False loops E per-expert launches (the fallback and the
-    reference in equivalence tests). Like the dense einsum they replace,
-    both paths compute all E experts over their capacity slots — the
-    saving is each expert's skipped zero tiles, not expert selection."""
+    reference in equivalence tests). The grouped launch is
+    occupancy-masked: router counts are threaded in as a live-row mask
+    so experts with zero routed tokens (and padded capacity slots) skip
+    compute inside the launch.
+
+    ``ragged_moe=None`` (default) follows the plans' ``ragged`` flag
+    (from ``PruneRecipe.ragged_moe``). When enabled and the batch is
+    decode-sized (``B*S <= RAGGED_TOKENS_MAX``), the capacity-slot
+    dispatch is replaced wholesale by the ragged expert batch — only
+    routed tokens are packed and the kernel's M-grid covers exactly
+    them. All paths are bitwise-identical on served rows."""
     from repro.models.moe import apply_moe
     plans = [p for p in (packed_layer.get((layer, nm))
                          for nm in ("gate", "up", "down"))
@@ -255,12 +307,33 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
         return y
     if group_experts is None:
         group_experts = all(p.group for p in plans)
+    if ragged_moe is None:
+        ragged_moe = all(p.ragged for p in plans)
 
-    if group_experts:
-        def expert_group_linear(name, xs, ws):
+    n_tokens = int(x.shape[0]) * int(x.shape[1])
+    if ragged_moe and n_tokens <= RAGGED_TOKENS_MAX:
+        def expert_ragged_linear(name, xp, ws, tile_expert):
             plan = packed_layer.get((layer, name))
             if isinstance(plan, PackedExpertProjection):
-                return grouped_sparse_linear(xs, ws, plan, interpret)
+                return ragged_sparse_linear(xp, ws, tile_expert, plan,
+                                            interpret)
+            # no plan for this projection: per-row expert gather oracle
+            from repro.kernels.grouped_block_sparse.ops import \
+                RAGGED_BLOCK_ROWS
+            row_e = jnp.maximum(
+                jnp.repeat(tile_expert, RAGGED_BLOCK_ROWS), 0)
+            return jnp.einsum("mk,mkn->mn", xp, ws[row_e])
+
+        y, _ = apply_moe(block_params["moe"], spec, x,
+                         expert_ragged_linear=expert_ragged_linear)
+        return y
+
+    if group_experts:
+        def expert_group_linear(name, xs, ws, row_live):
+            plan = packed_layer.get((layer, name))
+            if isinstance(plan, PackedExpertProjection):
+                return grouped_sparse_linear(xs, ws, plan, interpret,
+                                             row_live=row_live)
             return jnp.einsum("emk,ekn->emn", xs, ws)
 
         y, _ = apply_moe(block_params["moe"], spec, x,
@@ -280,15 +353,18 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
 
 def sparse_apply_ffn(block_params: dict, spec, x, packed: dict,
                      layer: int, interpret: bool = True,
-                     group_experts: Optional[bool] = None):
+                     group_experts: Optional[bool] = None,
+                     ragged_moe: Optional[bool] = None):
     """Feed-forward dispatch for the serving ``mlp_apply`` hook: dense-MLP
     layers go through :func:`sparse_apply_mlp`, MoE layers through
     :func:`sparse_apply_moe` (grouped one-launch expert plans by
-    default, per-expert launches with ``group_experts=False``)."""
+    default, per-expert launches with ``group_experts=False``, ragged
+    decode dispatch with ``ragged_moe``)."""
     from repro.models.specs import MoESpec
     if isinstance(spec, MoESpec):
         return sparse_apply_moe(block_params, spec, x, packed, layer,
-                                interpret, group_experts=group_experts)
+                                interpret, group_experts=group_experts,
+                                ragged_moe=ragged_moe)
     return sparse_apply_mlp(block_params, spec, x, packed, layer, interpret)
 
 
@@ -328,6 +404,7 @@ def plans_to_host(packed: dict) -> tuple:
             meta[key]["expert"] = True
             meta[key]["densities"] = list(p.densities)
             meta[key]["group"] = bool(p.group)
+            meta[key]["ragged"] = bool(p.ragged)
     return arrays, meta
 
 
@@ -344,7 +421,8 @@ def plans_from_host(arrays: dict, meta: dict) -> dict:
                 counts=counts, indices=indices, block=int(m["block"]),
                 density=float(m["density"]),
                 densities=tuple(float(d) for d in m["densities"]),
-                group=bool(m.get("group", True)))
+                group=bool(m.get("group", True)),
+                ragged=bool(m.get("ragged", False)))
         else:
             packed[(int(layer), name)] = PackedProjection(
                 counts=counts, indices=indices,

@@ -8,10 +8,12 @@ from repro.kernels.block_sparse.ops import (block_mask_from_weight_mask,
                                             blocksparse_matmul, plan_blocks)
 from repro.kernels.block_sparse.ref import block_sparse_matmul_ref
 from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels import counters
 from repro.kernels.grouped_block_sparse.ops import (
-    grouped_blocksparse_matmul, stack_expert_plans)
-from repro.kernels.grouped_block_sparse.ref import \
-    grouped_block_sparse_matmul_ref
+    RAGGED_BLOCK_ROWS, grouped_blocksparse_matmul,
+    ragged_blocksparse_matmul, stack_expert_plans)
+from repro.kernels.grouped_block_sparse.ref import (
+    grouped_block_sparse_matmul_ref, ragged_block_sparse_matmul_ref)
 from repro.kernels.paged_attention.ops import paged_attention_decode
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.ssd_scan.ops import ssd_apply
@@ -134,6 +136,113 @@ def test_grouped_skips_fully_pruned_expert_column():
                                    block_n=B, interpret=True)
     assert float(jnp.abs(y[0, :, 16:]).max()) == 0.0
     assert float(jnp.abs(y[1]).min()) > 0.0
+
+
+# ------------------------------------------- occupancy-aware dispatch
+
+def _occupancy_rows(pattern, E, M, rng):
+    """Per-expert live-row counts for an occupancy pattern."""
+    if pattern == "all-empty":
+        return np.zeros(E, np.int64)
+    if pattern == "one-hot":
+        rows = np.zeros(E, np.int64)
+        rows[rng.integers(E)] = max(1, M // 3)
+        return rows
+    if pattern == "skewed":
+        rows = np.zeros(E, np.int64)
+        rows[0] = M
+        for e in range(1, E):
+            rows[e] = max(0, 3 - e)
+        return rows
+    if pattern == "full":
+        return np.full(E, M, np.int64)
+    return rng.integers(0, M + 1, E)          # randomized fuzz
+
+
+OCCUPANCY_PATTERNS = ["all-empty", "one-hot", "skewed", "full",
+                      "random-0", "random-1", "random-2"]
+
+
+@pytest.mark.parametrize("block_m", [None, 16])
+@pytest.mark.parametrize("pattern", OCCUPANCY_PATTERNS)
+def test_grouped_masked_occupancy_fuzz(pattern, block_m):
+    """The occupancy-masked grouped launch: live rows bitwise-match the
+    unmasked launch, fully-dead experts produce exact zeros, and the
+    counters pin that empty experts contribute no computed-expert work."""
+    B = 16
+    x, w, counts, indices, _, _, _ = _expert_problem()
+    E, M, _ = x.shape
+    rng = np.random.default_rng(abs(hash(pattern)) % 2**32)
+    rows = _occupancy_rows(pattern, E, M, rng)
+    row_live = jnp.asarray(np.arange(M)[None, :] < rows[:, None])
+    counters.reset()
+    y = grouped_blocksparse_matmul(x, w, counts, indices, block_m=block_m,
+                                   block_k=B, block_n=B, interpret=True,
+                                   row_live=row_live)
+    snap = counters.snapshot()
+    occ = int((rows > 0).sum())
+    assert snap["grouped_block_sparse"] == 1
+    assert snap.get("grouped_block_sparse_experts_computed", 0) == occ
+    y_full = grouped_blocksparse_matmul(x, w, counts, indices,
+                                        block_m=block_m, block_k=B,
+                                        block_n=B, interpret=True)
+    for e in range(E):
+        np.testing.assert_array_equal(np.asarray(y[e, :rows[e]]),
+                                      np.asarray(y_full[e, :rows[e]]))
+    if (rows == 0).any():
+        dead = np.asarray(y)[rows == 0]
+        assert float(np.abs(dead).max()) == 0.0
+
+
+@pytest.mark.parametrize("pattern", OCCUPANCY_PATTERNS)
+def test_ragged_occupancy_fuzz(pattern):
+    """The ragged kernel over packed per-expert segments: each occupied
+    segment bitwise-matches that expert's own block_sparse launch, dead
+    padding tiles are exact zeros, and the counters pin that experts
+    with zero routed tokens launch zero tile work."""
+    B = 16
+    _, w, counts, indices, _, _, bms = _expert_problem()
+    E, K, _ = w.shape
+    A = RAGGED_BLOCK_ROWS
+    rng = np.random.default_rng(abs(hash(pattern)) % 2**32)
+    rows = _occupancy_rows(pattern, E, 48, rng)
+    rows = np.minimum(rows, 48)
+    seg = -(-rows // A) * A
+    ends = np.cumsum(seg)
+    off = ends - seg
+    m_max = int(max(ends[-1], A)) + A          # leave >=1 dead tail tile
+    tile_expert = np.full(m_max // A, -1, np.int32)
+    for e in range(E):
+        tile_expert[off[e] // A: ends[e] // A] = e
+    x = np.zeros((m_max, K), np.float32)
+    for e in range(E):
+        x[off[e]:off[e] + rows[e]] = rng.normal(size=(rows[e], K))
+    counters.reset()
+    y = ragged_blocksparse_matmul(jnp.asarray(x), w, counts, indices,
+                                  jnp.asarray(tile_expert), block_k=B,
+                                  block_n=B, interpret=True)
+    snap = counters.snapshot()
+    occ = int((rows > 0).sum())
+    assert snap["grouped_block_sparse_ragged"] == 1
+    assert snap.get("grouped_block_sparse_ragged_experts_computed", 0) == occ
+    # dead tiles: exact zeros
+    dead = np.asarray(y).reshape(m_max // A, A, -1)[tile_expert < 0]
+    assert dead.size and float(np.abs(dead).max()) == 0.0
+    # vs the pure-jnp oracle
+    yref = ragged_block_sparse_matmul_ref(jnp.asarray(x), w,
+                                          tile_expert, A, bms, B, B)
+    scale = float(jnp.abs(yref).max()) + 1e-9
+    assert float(jnp.abs(y - yref).max() / scale) < TOL[jnp.float32]
+    # each occupied segment == that expert's solo block_sparse launch,
+    # bitwise (same tile height, same f32 accumulation order)
+    for e in range(E):
+        if rows[e] == 0:
+            continue
+        ye = blocksparse_matmul(jnp.asarray(x[off[e]:ends[e]]), w[e],
+                                counts[e], indices[e], block_m=A,
+                                block_k=B, block_n=B, interpret=True)
+        np.testing.assert_array_equal(np.asarray(y[off[e]:ends[e]]),
+                                      np.asarray(ye))
 
 
 @pytest.mark.parametrize("shape", [(512, 768), (256, 256), (1024, 512)])
