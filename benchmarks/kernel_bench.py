@@ -56,6 +56,41 @@ def bench_block_sparse(p: float = 0.8, block: int = 16):
             "p": p, "block": block}
 
 
+def bench_quant_sparse(block: int = 16, K: int = 256, N: int = 256):
+    """Kept-tile int8 path vs its dequantized reference.
+
+    Packs a block-structured synthetic weight with ``quant="int8"``,
+    then checks (a) the quantized kernel is *bitwise* identical to the
+    unquantized kernel over the fake-quant weight (pow2 scales commute
+    with float rounding), (b) the real int8 storage — tiles + scale map
+    + plan — versus a dense bf16 copy, (c) quantization error against
+    the unquantized dense product."""
+    from repro.serve.sparse import (dequantized_weight, pack_projection,
+                                    sparse_linear)
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(3), 3)
+    w = jax.random.normal(kw, (K, N), jnp.float32)
+    keep = jax.random.uniform(km, (K // block, N // block)) > 0.8
+    mask = jnp.repeat(jnp.repeat(keep, block, 0), block, 1)
+    w = jnp.where(mask, w, 0)
+    p = pack_projection(w, block, quant="int8")
+    wfq = jnp.asarray(dequantized_weight(p, K))
+    x = jax.random.normal(kx, (64, K), jnp.float32)
+    y_q = sparse_linear(x, wfq, p, interpret=True, quant="int8")
+    y_ref = sparse_linear(x, wfq, p, interpret=True, quant="none")
+    dense = x @ w
+    tile_bytes = int(p.tiles.size)                    # int8: 1 B/elem
+    scale_bytes = int(p.scales.size) * 4
+    plan_bytes = (int(p.counts.size) + int(p.indices.size)
+                  + int(p.slots.size)) * 4
+    bytes_int8 = tile_bytes + scale_bytes + plan_bytes
+    return {"quant_identical": float(jnp.array_equal(y_q, y_ref)),
+            "quant_bytes_ratio": bytes_int8 / (K * N * 2),
+            "quant_rel_err": float(jnp.abs(y_q - dense).max()
+                                   / jnp.abs(dense).max()),
+            "quant_tile_bytes": tile_bytes,
+            "quant_density": p.density}
+
+
 def bench_attention_paths(S: int = 4096):
     """Chunked (flash-oracle) vs dense attention: CPU latency + the memory
     the flash path avoids (the S x S score matrix)."""
@@ -80,6 +115,11 @@ def main(fast: bool = True):
     bs = bench_block_sparse()
     print(f"block_sparse,p={bs['p']},skip_frac={bs['skip_frac']:.3f},"
           f"err={bs['allclose_err']:.2e}")
+    qs = bench_quant_sparse()
+    bs.update(qs)          # quant metrics ride the block-sparse row
+    print(f"quant_sparse,identical={bool(qs['quant_identical'])},"
+          f"bytes_ratio={qs['quant_bytes_ratio']:.3f},"
+          f"rel_err={qs['quant_rel_err']:.2e}")
     at = bench_attention_paths(2048 if fast else 4096)
     print(f"attention,dense_us={at['dense_us']:.0f},"
           f"chunked_us={at['chunked_us']:.0f},"

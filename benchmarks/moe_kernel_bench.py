@@ -37,7 +37,8 @@ from repro.kernels import counters
 from repro.models import transformer as T
 from repro.models.moe import apply_moe
 from repro.models.specs import MoESpec
-from repro.serve.sparse import flop_savings, sparse_apply_moe
+from repro.serve.sparse import (apply_fake_quant, flop_savings, pack_model,
+                                quant_plan_bytes, sparse_apply_moe)
 
 N_PROJ = 3                      # gate/up/down — launches counted per proj
 
@@ -180,8 +181,44 @@ def main(fast: bool = True):
     for name, s in dec_stats.items():
         print(f"{name:18s} experts/launch={s['experts_per_launch']:.1f} "
               f"launches/proj={s['launches_per_proj']:.1f}")
+    # --------------------------------- quant decode tick: int8 kept tiles
+    # Re-pack the pruned params with int8 kept-tile storage and fake-
+    # quantize the dense weights to the same round-trip, then require the
+    # quantized grouped AND ragged launches to be bitwise identical to
+    # their dequantized reference paths (pow2 scales make this exact).
+    qpacked = pack_model(art.params, art.cfg, block=16,
+                         group_experts=True, ragged_moe=True, quant="int8")
+    qparams = apply_fake_quant(art.params, art.cfg, qpacked)
+    qblock = qparams["blocks"][layer]
+
+    def run_dec_quant(quant, ragged):
+        return sparse_apply_moe(qblock, spec, x_dec, qpacked, layer,
+                                group_experts=True, ragged_moe=ragged,
+                                quant=quant)
+
+    q_outs = {(q, r): run_dec_quant(q, r)
+              for q in ("int8", "none") for r in (False, True)}
+    counters.reset()
+    run_dec_quant("int8", False)
+    run_dec_quant("int8", True)
+    qsnap = counters.snapshot()
+    quant_launches = (qsnap.get("grouped_block_sparse_quant", 0)
+                      + qsnap.get("grouped_block_sparse_ragged_quant", 0))
+    quant_exact = all(
+        bool(jnp.array_equal(q_outs[("int8", r)], q_outs[("none", r)]))
+        for r in (False, True)) and bool(
+        jnp.array_equal(q_outs[("int8", False)], q_outs[("int8", True)]))
+    qbytes = quant_plan_bytes(qpacked, qparams, art.cfg)
+
     print(f"occupancy match: {occupancy_match}; empty experts skipped: "
           f"{empty_skipped}; ragged==grouped: {dec_exact}")
+    print(f"quant decode tick: int8==reference (grouped & ragged): "
+          f"{quant_exact}; quant launches/proj="
+          f"{quant_launches / (2 * N_PROJ):.1f}; "
+          f"bytes ratio vs bf16 dense: {qbytes['ratio_vs_bf16']:.3f}")
+    if not quant_exact:
+        raise AssertionError(
+            "quantized MoE kernels diverged from dequantized reference")
     if not exact:
         # same accumulation order per expert => must be bitwise equal
         raise AssertionError("grouped kernel diverged from per-expert loop")
@@ -207,6 +244,9 @@ def main(fast: bool = True):
             "decode_occupancy_match": float(occupancy_match),
             "decode_empty_experts_skipped": float(empty_skipped),
             "decode_paths_identical": float(dec_exact),
+            "quant_paths_identical": float(quant_exact),
+            "quant_bytes_ratio": qbytes["ratio_vs_bf16"],
+            "quant_launches_per_proj": quant_launches / (2 * N_PROJ),
             "decode_grouped_tokens_per_s":
                 dec_stats["decode_grouped"]["tokens_per_s"],
             "decode_ragged_tokens_per_s":

@@ -200,11 +200,16 @@ def _metrics(name: str, result, us: float) -> dict:
                 "ragged_launches_per_proj", "decode_occupancy_match",
                 "decode_empty_experts_skipped", "decode_paths_identical",
                 "decode_grouped_tokens_per_s",
-                "decode_ragged_tokens_per_s", "prune_seconds")})
+                "decode_ragged_tokens_per_s", "prune_seconds",
+                "quant_paths_identical", "quant_bytes_ratio",
+                "quant_launches_per_proj")})
         elif name == "kernel_bench":
             bs, _ = result
             m.update({"skip_frac": bs["skip_frac"],
-                      "allclose_err": bs["allclose_err"]})
+                      "allclose_err": bs["allclose_err"],
+                      "quant_identical": bs["quant_identical"],
+                      "quant_bytes_ratio": bs["quant_bytes_ratio"],
+                      "quant_rel_err": bs["quant_rel_err"]})
         elif name == "paged_attn_bench":
             m.update({k: result[k] for k in (
                 "kernel_agrees", "kernel_max_err", "token_identical",

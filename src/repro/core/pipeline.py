@@ -107,29 +107,47 @@ def stage_pack(ctx: PipelineContext) -> None:
     launch loop, ``recipe.ragged_moe`` for the ragged routed-tokens-only
     dispatch at decode sizes; the flags ride inside each plan through
     the artifact bundle, so rehydrated engines pick the same path with
-    no repacking."""
-    from repro.serve.sparse import pack_model_with_report
+    no repacking.
+
+    ``recipe.quant="int8"`` additionally compacts each plan's kept
+    tiles into int8 + pow2-scale storage and *replaces* the quantized
+    projections' params with their fake-quant round-trip — the dense
+    forward, the evaluate stage, and the dequantized reference path
+    then all see exactly the weights the int8 kernels compute with."""
+    from repro.serve.sparse import apply_fake_quant, pack_model_with_report
     ctx.packed, ctx.pack_report = pack_model_with_report(
         ctx.params, ctx.cfg, block=ctx.recipe.block,
         group_experts=ctx.recipe.group_experts,
-        ragged_moe=ctx.recipe.ragged_moe)
+        ragged_moe=ctx.recipe.ragged_moe,
+        quant=ctx.recipe.quant)
+    if ctx.recipe.quant == "int8":
+        ctx.params = apply_fake_quant(ctx.params, ctx.cfg, ctx.packed)
 
 
 @register_stage("report")
 def stage_report(ctx: PipelineContext) -> None:
-    """Provenance + timing summary (the CI-tracked production-time row)."""
+    """Provenance + timing summary (the CI-tracked production-time row).
+
+    With a quantized pack, ``bytes_after`` is real storage: the dense
+    bytes of every quantized projection are swapped for its int8 tile +
+    scale + plan bytes from the pack report."""
     r = ctx.recipe
     ra = ctx.rank_artifact
+    bytes_after = param_bytes(ctx.params)
+    qb = (ctx.pack_report or {}).get("quant_bytes")
+    if qb:
+        bytes_after += qb["total_bytes"] - qb["dense_bytes"]
     ctx.report.update({
         "arch": r.arch,
         "p": r.p,
         "category": ctx.category,
         "granularity": r.granularity,
         "selector": r.selector,
+        "quant": r.quant,
         "params_before": ctx.dense_params,
         "bytes_before": ctx.dense_bytes,
         "params_after": param_count(ctx.params),
-        "bytes_after": param_bytes(ctx.params),
+        "bytes_after": bytes_after,
         "profile_seconds": ra.profile_seconds if ra else None,
         "calibration_tokens": ra.n_tokens if ra else None,
         "prune_seconds": (ctx.timings.get("plan", 0.0)

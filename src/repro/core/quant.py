@@ -1,38 +1,61 @@
-"""Weight-only quantisation baseline (Table XIII comparison).
+"""Weight-only quantisation: the Table XIII RTN baseline plus the
+per-tile int8 helpers behind the sparse × quantized serving path.
 
-Per-group symmetric round-to-nearest int{8,4,3,2} on every projection.
-The dequantised model runs through the normal forward — this measures the
-quality/compression tradeoff Mosaic is compared against in the paper.
+``quantize_array``/``quantize_model`` implement standard group-wise
+symmetric round-to-nearest int{8,4,3,2}: each output column quantises
+in groups of consecutive *input* rows, so groups never straddle output
+columns (the GPTQ/RTN convention). The dequantised model runs through
+the normal dense forward — the quality/compression baseline Mosaic is
+compared against in the paper's Table XIII.
+
+``quantize_tiles``/``dequantize_tiles`` quantise the *kept* tiles of a
+block-sparse plan to int8 with one symmetric power-of-two scale per
+tile. A power-of-two scale only shifts exponents, so multiplying by it
+commutes with every floating-point rounding in the accumulation. That
+is what lets the quantized kernels apply the scale to the *accumulated
+tile product* (one multiply per tile) and still be bitwise identical to
+running the unquantized kernel over the fake-quant (dequantised)
+weights; that identity is the numerics oracle in
+``tests/test_quant_kernels.py``.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.tree import tree_get, tree_set
+from repro.core.recipe import QUANT_MODES  # noqa: F401  (canonical home)
 from repro.core.registry import projections
 from repro.models.specs import ModelConfig
 
+INT8_MAXQ = 127
+
 
 def quantize_array(w: jax.Array, bits: int, group: int = 128):
-    """Returns (q int8, scales) with per-(group of input rows) scales."""
+    """Group-wise symmetric RTN. The weight folds to ``(K, N)`` (input
+    rows × flattened outputs); each output column quantises in groups of
+    ``group`` consecutive input rows, so groups never straddle column
+    boundaries. Returns ``(q, scale, orig_shape, pad)``: ``q`` is
+    ``(N, ceil(K/group), group)``, ``scale`` broadcasts against it.
+    Invert with :func:`dequantize_array`."""
     orig_shape = w.shape
-    flat = w.astype(jnp.float32).reshape(-1)
-    pad = (-flat.size) % group
-    flat = jnp.pad(flat, (0, pad))
-    g = flat.reshape(-1, group)
+    w2 = w.astype(jnp.float32).reshape(w.shape[0], -1)         # (K, N)
+    pad = (-w2.shape[0]) % group
+    cols = jnp.pad(w2, ((0, pad), (0, 0))).T                   # (N, K+pad)
+    g = cols.reshape(cols.shape[0], -1, group)
     maxq = 2 ** (bits - 1) - 1
-    scale = jnp.max(jnp.abs(g), axis=1, keepdims=True) / maxq
+    scale = jnp.max(jnp.abs(g), axis=-1, keepdims=True) / maxq
     scale = jnp.where(scale == 0, 1.0, scale)
     q = jnp.clip(jnp.round(g / scale), -maxq - 1, maxq).astype(jnp.int8)
     return q, scale, orig_shape, pad
 
 
 def dequantize_array(q, scale, orig_shape, pad):
-    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    cols = (q.astype(jnp.float32) * scale).reshape(q.shape[0], -1)
     if pad:
-        flat = flat[:-pad]
-    return flat.reshape(orig_shape)
+        cols = cols[:, :-pad]
+    return cols.T.reshape(orig_shape)
 
 
 def quantize_model(params, cfg: ModelConfig, bits: int, group: int = 128):
@@ -49,3 +72,32 @@ def quantize_model(params, cfg: ModelConfig, bits: int, group: int = 128):
                           dequantize_array(q, scale, shape, pad).astype(w.dtype))
     stats = {"compression": dense_bits / max(quant_bits, 1), "bits": bits}
     return params, stats
+
+
+# ------------------------------------------------------------ kept tiles
+
+
+def quantize_tiles(tiles) -> tuple:
+    """Symmetric int8 with one power-of-two scale per tile.
+
+    ``tiles``: (T, bk, bn) float. Returns ``(q, scales)`` with ``q``
+    int8 and ``scales`` f32, ``scales[t] = 2^ceil(log2(amax_t / 127))``
+    (all-zero tiles get scale 1.0). Rounding the scale *up* to a power
+    of two keeps ``|q| <= 127`` and makes dequantisation exact in both
+    f32 and bf16 — int8 magnitudes and pow2 factors carry no mantissa
+    bits beyond what bf16 holds."""
+    t = np.asarray(tiles, np.float32)
+    amax = np.max(np.abs(t), axis=(1, 2))
+    exp = np.ceil(np.log2(np.maximum(amax, 1e-38) / INT8_MAXQ))
+    scales = np.where(amax > 0,
+                      np.exp2(np.clip(exp, -126, 126)),
+                      1.0).astype(np.float32)
+    q = np.clip(np.rint(t / scales[:, None, None]),
+                -INT8_MAXQ, INT8_MAXQ).astype(np.int8)
+    return q, scales
+
+
+def dequantize_tiles(q, scales) -> np.ndarray:
+    """Exact inverse of the pow2 fake-quant: (T, bk, bn) f32 tiles."""
+    return (np.asarray(q, np.float32)
+            * np.asarray(scales, np.float32)[:, None, None])

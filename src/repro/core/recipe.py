@@ -16,6 +16,7 @@ from typing import Optional
 
 GRANULARITIES = ("global", "layer", "projection")
 DEFAULT_STAGES = ("rank", "plan", "prune", "pack", "report")
+QUANT_MODES = ("none", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,8 +42,11 @@ class PruneRecipe:
     for; ``group_experts`` marks MoE expert plan stacks for the grouped
     (one-launch-for-all-experts) kernel instead of the per-expert launch
     loop; ``ragged_moe`` additionally marks them for the ragged
-    (routed-tokens-only) dispatch at decode batch sizes. ``stages`` is
-    the ordered subset of the stage registry to run.
+    (routed-tokens-only) dispatch at decode batch sizes. ``quant``
+    ("none" | "int8") makes the pack stage compact each plan's *kept*
+    tiles into int8 storage with per-tile pow2 scales — the sparse ×
+    quantized serving path. ``stages`` is the ordered subset of the
+    stage registry to run.
     """
     arch: str
     p: float
@@ -59,6 +63,7 @@ class PruneRecipe:
     block: int = 128
     group_experts: bool = True
     ragged_moe: bool = False
+    quant: str = "none"
     calibration: CalibrationSpec = CalibrationSpec()
     stages: tuple = DEFAULT_STAGES
 
@@ -68,6 +73,9 @@ class PruneRecipe:
         if self.granularity not in GRANULARITIES:
             raise ValueError(f"unknown granularity {self.granularity!r}; "
                              f"choices: {GRANULARITIES}")
+        if self.quant not in QUANT_MODES:
+            raise ValueError(f"unknown quant {self.quant!r}; "
+                             f"choices: {QUANT_MODES}")
         if not 0.0 <= self.structured_share <= 1.0:
             raise ValueError(
                 f"structured_share={self.structured_share} outside [0, 1]")

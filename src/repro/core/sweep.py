@@ -44,21 +44,25 @@ from repro.core.rank_controller import (RankArtifact, ensure_hessians,
 from repro.core.recipe import PruneRecipe
 from repro.models.specs import ModelConfig
 
-GRID_AXES = ("p", "category", "selector", "granularity")
+GRID_AXES = ("p", "category", "selector", "granularity", "quant")
 
 CSV_COLUMNS = ("label", "arch", "p", "category", "selector", "granularity",
-               "ppl", "acc", "bytes_after", "params_after", "prune_seconds",
-               "point_seconds", "flop_savings", "expert_plans",
-               "quality_per_byte", "pareto")
+               "quant", "ppl", "acc", "bytes_after", "params_after",
+               "prune_seconds", "point_seconds", "flop_savings",
+               "expert_plans", "quality_per_byte", "pareto")
 
 
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
-    """The sweep grid: values per recipe axis; empty axis = keep base."""
+    """The sweep grid: values per recipe axis; empty axis = keep base.
+    The ``quant`` axis sweeps precision ("none" / "int8") against the
+    same profile, so Pareto rows chart quality-per-byte across
+    p × precision."""
     p: tuple = ()
     category: tuple = ()
     selector: tuple = ()
     granularity: tuple = ()
+    quant: tuple = ()
 
     def __post_init__(self):
         for name in GRID_AXES:
@@ -113,6 +117,8 @@ def point_label(recipe: PruneRecipe) -> str:
     parts = [f"p{recipe.p:g}", recipe.category or "auto", recipe.selector]
     if recipe.granularity != "projection":
         parts.append(recipe.granularity)
+    if recipe.quant != "none":
+        parts.append(recipe.quant)
     return "-".join(parts)
 
 
@@ -263,6 +269,7 @@ def run_sweep(base: PruneRecipe,
             "category": rep.get("category"),
             "selector": point.selector,
             "granularity": point.granularity,
+            "quant": rep.get("quant", point.quant),
             "ppl": rep.get("ppl"),
             "acc": rep.get("acc"),
             "bytes_after": rep.get("bytes_after"),

@@ -129,6 +129,156 @@ def grouped_block_sparse_matmul(x: jax.Array, w: jax.Array,
     )(counts, indices, work, x, w)
 
 
+def _quant_kernel(count_ref, idx_ref, slot_ref, scale_ref, work_ref, x_ref,
+                  w_ref, o_ref, acc_ref, *, max_nnz: int):
+    e = pl.program_id(0)
+    m = pl.program_id(1)
+    n = pl.program_id(2)
+    s = pl.program_id(3)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((s < count_ref[e, n]) & (work_ref[e, m] > 0))
+    def _accum():
+        # pow2 per-tile scale on the accumulated product: bitwise-equal
+        # to the unquantized kernel over the fake-quant weight stack
+        acc_ref[...] += jnp.dot(x_ref[0], w_ref[0].astype(x_ref.dtype),
+                                preferred_element_type=jnp.float32
+                                ) * scale_ref[e, n, s]
+
+    @pl.when(s == max_nnz - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_grouped_block_sparse_matmul(x: jax.Array, tiles: jax.Array,
+                                      counts: jax.Array,
+                                      indices: jax.Array,
+                                      slots: jax.Array,
+                                      scales: jax.Array, *,
+                                      work: jax.Array | None = None,
+                                      block_m: int = 128,
+                                      block_k: int = 128,
+                                      block_n: int = 128,
+                                      interpret: bool = False) -> jax.Array:
+    """The grouped launch over int8 kept-tile storage.
+
+    Same grid and occupancy masking as
+    :func:`grouped_block_sparse_matmul`, but the dense ``(E, K, N)``
+    weight stack is replaced by ``tiles`` — every expert's kept tiles
+    concatenated in plan order into one ``(T, block_k, block_n)`` int8
+    array — with ``slots (E, N/bn, max_nnz)`` holding *absolute* storage
+    rows and ``scales (E, N/bn, max_nnz)`` the per-tile pow2 dequant
+    factors, both scalar-prefetched beside the plan.
+    """
+    E, M, K = x.shape
+    assert tiles.shape[1:] == (block_k, block_n)
+    N = counts.shape[1] * block_n
+    assert M % block_m == 0 and K % block_k == 0
+    max_nnz = indices.shape[-1]
+    if work is None:
+        work = jnp.ones((E, M // block_m), jnp.int32)
+    assert work.shape == (E, M // block_m)
+
+    def x_map(e, m, n, s, cnt, idx, slt, scl, wrk):
+        return (e, m, jnp.where(wrk[e, m] > 0, idx[e, n, s], idx[e, n, 0]))
+
+    def w_map(e, m, n, s, cnt, idx, slt, scl, wrk):
+        return (jnp.where(wrk[e, m] > 0, slt[e, n, s], slt[e, n, 0]), 0, 0)
+
+    grid = (E, M // block_m, N // block_n, max_nnz)
+    kernel = functools.partial(_quant_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, block_m, block_k), x_map),
+                pl.BlockSpec((1, block_k, block_n), w_map),
+            ],
+            out_specs=pl.BlockSpec((1, block_m, block_n),
+                                   lambda e, m, n, s, cnt, idx, slt, scl,
+                                   wrk: (e, m, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        interpret=interpret,
+    )(counts, indices, slots, scales, work, x, tiles)
+
+
+def _quant_ragged_kernel(count_ref, idx_ref, slot_ref, scale_ref, tile_ref,
+                         x_ref, w_ref, o_ref, acc_ref, *, max_nnz: int):
+    t = pl.program_id(0)
+    n = pl.program_id(1)
+    s = pl.program_id(2)
+    e = tile_ref[t]
+    ec = jnp.maximum(e, 0)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when((e >= 0) & (s < count_ref[ec, n]))
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[0].astype(x_ref.dtype),
+                                preferred_element_type=jnp.float32
+                                ) * scale_ref[ec, n, s]
+
+    @pl.when(s == max_nnz - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def quant_ragged_block_sparse_matmul(x: jax.Array, tiles: jax.Array,
+                                     counts: jax.Array, indices: jax.Array,
+                                     slots: jax.Array, scales: jax.Array,
+                                     tile_expert: jax.Array, *,
+                                     block_m: int = 16, block_k: int = 128,
+                                     block_n: int = 128,
+                                     interpret: bool = False) -> jax.Array:
+    """The ragged routed-tokens-only launch over int8 kept-tile storage
+    (``slots``/``scales`` as in :func:`quant_grouped_block_sparse_matmul`;
+    dead tiles clamp their slot like they clamp their K-block index)."""
+    M, K = x.shape
+    assert tiles.shape[1:] == (block_k, block_n)
+    E, nN = counts.shape
+    N = nN * block_n
+    assert M % block_m == 0 and K % block_k == 0
+    assert tile_expert.shape == (M // block_m,)
+    max_nnz = indices.shape[-1]
+
+    def x_map(t, n, s, cnt, idx, slt, scl, te):
+        ec = jnp.maximum(te[t], 0)
+        return (t, jnp.where(te[t] >= 0, idx[ec, n, s], idx[ec, n, 0]))
+
+    def w_map(t, n, s, cnt, idx, slt, scl, te):
+        ec = jnp.maximum(te[t], 0)
+        return (jnp.where(te[t] >= 0, slt[ec, n, s], slt[ec, n, 0]), 0, 0)
+
+    grid = (M // block_m, N // block_n, max_nnz)
+    kernel = functools.partial(_quant_ragged_kernel, max_nnz=max_nnz)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, block_k), x_map),
+                pl.BlockSpec((1, block_k, block_n), w_map),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda t, n, s, cnt, idx, slt, scl, te:
+                                   (t, n)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(counts, indices, slots, scales, tile_expert, x, tiles)
+
+
 def _ragged_kernel(count_ref, idx_ref, tile_ref, x_ref, w_ref, o_ref,
                    acc_ref, *, max_nnz: int):
     t = pl.program_id(0)

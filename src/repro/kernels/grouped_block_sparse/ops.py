@@ -12,7 +12,8 @@ import numpy as np
 
 from repro.kernels import counters
 from repro.kernels.grouped_block_sparse.kernel import (
-    grouped_block_sparse_matmul, ragged_block_sparse_matmul)
+    grouped_block_sparse_matmul, quant_grouped_block_sparse_matmul,
+    quant_ragged_block_sparse_matmul, ragged_block_sparse_matmul)
 
 
 def stack_expert_plans(counts_e, indices_e) -> tuple:
@@ -85,6 +86,72 @@ def _ragged_matmul_jit(x, w, counts, indices, tile_expert, block_m, block_k,
     return ragged_block_sparse_matmul(x, w, counts, indices, tile_expert,
                                       block_m=block_m, block_k=block_k,
                                       block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                             "interpret"))
+def _quant_grouped_matmul_jit(x, tiles, counts, indices, slots, scales,
+                              work, block_m, block_k, block_n, interpret):
+    return quant_grouped_block_sparse_matmul(
+        x, tiles, counts, indices, slots, scales, work=work,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        interpret=interpret)
+
+
+def quant_grouped_blocksparse_matmul(x, tiles, counts, indices, slots,
+                                     scales, block_m=None, block_k=128,
+                                     block_n=128, interpret=False,
+                                     row_live=None):
+    """Public op: the grouped launch with kept tiles stored int8 + pow2
+    scales (same panel default and ``row_live`` occupancy masking as
+    :func:`grouped_blocksparse_matmul`)."""
+    if block_m is None:
+        block_m = x.shape[1]
+    E = x.shape[0]
+    n_mblocks = x.shape[1] // block_m
+    if row_live is None:
+        work = jnp.ones((E, n_mblocks), jnp.int32)
+        experts_computed = E
+    else:
+        work = row_live.reshape(E, n_mblocks, block_m).any(-1)
+        experts_computed = work.any(-1).sum()
+        work = work.astype(jnp.int32)
+    counters.record("grouped_block_sparse_quant")
+    counters.record_concrete("grouped_block_sparse_quant_experts_computed",
+                             experts_computed)
+    return _quant_grouped_matmul_jit(x, tiles, counts, indices, slots,
+                                     scales, work, block_m, block_k,
+                                     block_n, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "block_n",
+                                             "interpret"))
+def _quant_ragged_matmul_jit(x, tiles, counts, indices, slots, scales,
+                             tile_expert, block_m, block_k, block_n,
+                             interpret):
+    return quant_ragged_block_sparse_matmul(
+        x, tiles, counts, indices, slots, scales, tile_expert,
+        block_m=block_m, block_k=block_k, block_n=block_n,
+        interpret=interpret)
+
+
+def quant_ragged_blocksparse_matmul(x, tiles, counts, indices, slots,
+                                    scales, tile_expert,
+                                    block_m=RAGGED_BLOCK_ROWS, block_k=128,
+                                    block_n=128, interpret=False):
+    """Public op: the ragged routed-tokens-only launch with kept tiles
+    stored int8 + pow2 scales."""
+    counters.record("grouped_block_sparse_ragged_quant")
+    E = counts.shape[0]
+    live = tile_expert >= 0
+    occupied = (jnp.zeros((E,), jnp.int32)
+                .at[jnp.maximum(tile_expert, 0)]
+                .max(live.astype(jnp.int32)).sum())
+    counters.record_concrete(
+        "grouped_block_sparse_ragged_quant_experts_computed", occupied)
+    return _quant_ragged_matmul_jit(x, tiles, counts, indices, slots,
+                                    scales, tile_expert.astype(jnp.int32),
+                                    block_m, block_k, block_n, interpret)
 
 
 def ragged_blocksparse_matmul(x, w, counts, indices, tile_expert,

@@ -78,6 +78,7 @@ def _load_or_prune(args) -> tuple:
             recipe = PruneRecipe(
                 arch=args.arch, p=args.prune, category=args.category,
                 align_channels=8, block=args.sparse_block,
+                quant=("int8" if args.quant == "int8" else "none"),
                 calibration=CalibrationSpec(n_samples=8, batch_size=4,
                                             seq_len=args.prompt_len))
         if not (args.sparse or args.save_artifact):
@@ -142,6 +143,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
                                         compute_dtype=jnp.float32,
                                         group_experts=group,
                                         ragged_moe=ragged,
+                                        quant=args.quant,
                                         paged_kernel=args.paged_kernel)
         print(f"placement: weights {place.weights_bytes} B "
               f"(density {place.density:.0%}), KV "
@@ -158,6 +160,7 @@ def _run_gateway(args, params, cfg, packed) -> None:
                                 cache_dtype=jnp.float32,
                                 group_experts=group,
                                 ragged_moe=ragged,
+                                quant=args.quant,
                                 paged_kernel=args.paged_kernel,
                                 scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)
@@ -213,6 +216,12 @@ def main() -> None:
                     help="MoE decode ticks: pack only routed tokens into "
                          "ragged expert batches (skips empty experts) "
                          "instead of full capacity-slot batches")
+    ap.add_argument("--quant", choices=["int8", "none"], default=None,
+                    help="projection weight storage: int8 streams the "
+                         "plans' kept-tile int8 storage (needs a bundle "
+                         "packed with quant), none forces the "
+                         "dequantized reference path (default: follow "
+                         "plan flags)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--block-size", type=int, default=None, metavar="N",
                     help="continuous engine: page the KV cache into "
@@ -268,7 +277,8 @@ def main() -> None:
                                 compute_dtype=jnp.float32,
                                 cache_dtype=jnp.float32,
                                 group_experts=group,
-                                ragged_moe=ragged)
+                                ragged_moe=ragged,
+                                quant=args.quant)
         eng = Engine(params, cfg, serve_cfg, packed=packed)
         prompt = jnp.asarray(
             corpus.batch(0, args.batch, args.prompt_len)[:, :args.prompt_len])
@@ -303,7 +313,7 @@ def main() -> None:
                             prefill_chunk=args.prefill_chunk,
                             compute_dtype=jnp.float32,
                             cache_dtype=jnp.float32, group_experts=group,
-                            ragged_moe=ragged,
+                            ragged_moe=ragged, quant=args.quant,
                             paged_kernel=args.paged_kernel,
                             scheduler=args.scheduler)
     eng = ContinuousEngine(params, cfg, serve_cfg, packed=packed)

@@ -211,7 +211,7 @@ class ContinuousEngine:
         self.metrics = MetricsRegistry()
         mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
                                            serve.group_experts,
-                                           serve.ragged_moe)
+                                           serve.ragged_moe, serve.quant)
                      if packed else None)
         if serve.paged:
             self._prefill = jax.jit(make_paged_prefill_step(

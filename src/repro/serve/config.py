@@ -47,6 +47,12 @@ class ServeConfig:
     ragged_moe: Optional[bool] = None  # MoE: ragged (routed-tokens-only)
     #                                 dispatch at decode batch sizes
     #                                 (None follows plan flags)
+    quant: Optional[str] = None     # projection weight storage: "int8"
+    #                                 streams the plans' kept-tile int8
+    #                                 storage (requires a quantized
+    #                                 pack), "none" forces the
+    #                                 dequantized reference path, None
+    #                                 follows plan flags
     paged_kernel: bool = False      # paged decode: fused Pallas
     #                                 paged-attention kernel instead of
     #                                 the gather path (needs block_size)
@@ -56,10 +62,14 @@ class ServeConfig:
     #                                 fifo | priority | slo
 
     def __post_init__(self):
+        from repro.core.recipe import QUANT_MODES
         from repro.serve.policies import SCHEDULERS
         if self.scheduler not in SCHEDULERS:
             raise ValueError(f"unknown scheduler {self.scheduler!r}; "
                              f"registered: {SCHEDULERS.names()}")
+        if self.quant is not None and self.quant not in QUANT_MODES:
+            raise ValueError(f"unknown quant {self.quant!r}; "
+                             f"choices: {QUANT_MODES} or None")
         if self.block_size is not None:
             if self.max_seq % self.block_size:
                 raise ValueError(

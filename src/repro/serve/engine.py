@@ -28,7 +28,8 @@ from repro.serve.config import ServeConfig
 
 def make_sparse_mlp_apply(packed: dict, interpret: bool = True,
                           group_experts: Optional[bool] = None,
-                          ragged_moe: Optional[bool] = None):
+                          ragged_moe: Optional[bool] = None,
+                          quant: Optional[str] = None):
     """`mlp_apply` hook routing FFN layers through the block-sparse
     kernels wherever ``packed`` (from ``sparse.pack_model``) has a plan —
     dense MLPs per projection, MoE layers via their per-expert plan
@@ -36,14 +37,26 @@ def make_sparse_mlp_apply(packed: dict, interpret: bool = True,
     (``group_experts=None`` follows each plan's own ``group`` flag),
     E per-expert launches with ``group_experts=False``, and — with
     ``ragged_moe`` (None follows each plan's ``ragged`` flag) — the
-    ragged routed-tokens-only dispatch at decode batch sizes."""
+    ragged routed-tokens-only dispatch at decode batch sizes.
+
+    ``quant`` (from ``ServeConfig.quant``) picks the weight storage the
+    kernels stream: None follows each plan's own flag, "int8" requires
+    kept-tile int8 storage in the plans (raises up front if absent),
+    "none" forces the dequantized reference path."""
     from repro.serve.sparse import sparse_apply_ffn
+
+    if quant == "int8" and not any(
+            getattr(p, "quant", "none") == "int8" and p.tiles is not None
+            for p in packed.values()):
+        raise ValueError(
+            "ServeConfig.quant='int8' but no plan carries int8 kept-tile "
+            "storage — pack with PruneRecipe.quant='int8' first")
 
     def mlp_apply(block_params, spec, x, layer):
         return sparse_apply_ffn(block_params, spec, x, packed, layer,
                                 interpret=interpret,
                                 group_experts=group_experts,
-                                ragged_moe=ragged_moe)
+                                ragged_moe=ragged_moe, quant=quant)
     return mlp_apply
 
 
@@ -158,7 +171,7 @@ class Engine:
         self.cache_dtype = serve.cache_dtype
         mlp_apply = (make_sparse_mlp_apply(packed, serve.interpret,
                                            serve.group_experts,
-                                           serve.ragged_moe)
+                                           serve.ragged_moe, serve.quant)
                      if packed else None)
         self.prefill_step = jax.jit(
             make_prefill_step(cfg, serve.compute_dtype, mlp_apply))

@@ -23,19 +23,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.tree import tree_get
+from repro.common.tree import tree_get, tree_set
 from repro.core.registry import projections
 from repro.kernels.block_sparse.ops import (block_mask_from_weight_mask,
-                                            blocksparse_matmul, plan_blocks)
+                                            blocksparse_matmul,
+                                            gather_kept_tiles, plan_blocks,
+                                            plan_slots,
+                                            quant_blocksparse_matmul)
 from repro.models.specs import ModelConfig
 
 
 @dataclasses.dataclass
 class PackedProjection:
+    """One projection's block plan. With ``quant="int8"`` the plan also
+    carries the kept tiles themselves — compacted int8 storage plus the
+    per-tile power-of-two scales and the slot map locating column
+    ``n``'s step-``s`` tile — so the serving path never touches the
+    dense weight."""
     counts: jax.Array          # (N/bn,)
     indices: jax.Array         # (N/bn, max_nnz)
     block: int
     density: float             # fraction of nonzero tiles
+    quant: str = "none"        # "none" | "int8" (kept-tile storage)
+    tiles: Optional[jax.Array] = None   # (T, block, block) int8
+    scales: Optional[jax.Array] = None  # (N/bn, max_nnz) f32 pow2
+    slots: Optional[jax.Array] = None   # (N/bn, max_nnz) int32 tile rows
 
 
 @dataclasses.dataclass
@@ -59,38 +71,78 @@ class PackedExpertProjection:
     densities: tuple           # per-expert nonzero-tile fractions
     group: bool = True         # serve via the grouped (one-launch) kernel
     ragged: bool = False       # ragged dispatch for decode-sized batches
+    quant: str = "none"        # "none" | "int8" (kept-tile storage)
+    tiles: Optional[jax.Array] = None   # (T_total, block, block) int8 —
+    #                                     every expert's kept tiles in one
+    #                                     stacked array
+    scales: Optional[jax.Array] = None  # (E, N/bn, max_nnz) f32 pow2
+    slots: Optional[jax.Array] = None   # (E, N/bn, max_nnz) int32 —
+    #                                     absolute rows into ``tiles``
 
     @property
     def n_experts(self) -> int:
         return int(self.counts.shape[0])
 
     def expert(self, e: int) -> PackedProjection:
-        """The expert-``e`` view the block-sparse kernel consumes."""
+        """The expert-``e`` view the block-sparse kernel consumes.
+        Quantized stacks hand the *full* tile array to every view — the
+        per-expert slot rows are absolute, so each view only ever
+        reaches its own expert's tiles."""
         return PackedProjection(counts=self.counts[e],
                                 indices=self.indices[e], block=self.block,
-                                density=float(self.densities[e]))
+                                density=float(self.densities[e]),
+                                quant=self.quant, tiles=self.tiles,
+                                scales=(None if self.scales is None
+                                        else self.scales[e]),
+                                slots=(None if self.slots is None
+                                       else self.slots[e]))
 
 
-def pack_projection(w, block: int = 128) -> Optional[PackedProjection]:
+def _quantize_plan(w2, counts, indices, block: int) -> tuple:
+    """Kept-tile int8 storage for one planned 2-D weight: gathered tiles
+    quantised with pow2 per-tile scales, plus the (nN, max_nnz) slot and
+    scale maps the kernel scalar-prefetches (dead steps edge-clamp with
+    the slot map, so their scale entries are the clamped tile's)."""
+    from repro.core.quant import quantize_tiles
+    tiles = gather_kept_tiles(w2, counts, indices, block, block)
+    q, tile_scales = quantize_tiles(tiles)
+    slots, _ = plan_slots(counts, np.asarray(indices).shape[-1])
+    scales = tile_scales[slots]
+    return q, scales, slots
+
+
+def pack_projection(w, block: int = 128,
+                    quant: str = "none") -> Optional[PackedProjection]:
     """Build the kernel's block plan from a pruned weight. Returns None
-    when the (2-D-folded) weight doesn't tile evenly."""
+    when the (2-D-folded) weight doesn't tile evenly. ``quant="int8"``
+    additionally compacts the kept tiles into int8 storage riding the
+    plan (see :class:`PackedProjection`)."""
     w2 = np.asarray(w).reshape(w.shape[0], -1)
     K, N = w2.shape
     if K % block or N % block:
         return None
     bm = block_mask_from_weight_mask(w2 != 0, block, block)
     counts, indices = plan_blocks(bm)
-    return PackedProjection(counts=counts, indices=indices, block=block,
-                            density=float(bm.mean()))
+    p = PackedProjection(counts=counts, indices=indices, block=block,
+                        density=float(bm.mean()), quant=quant)
+    if quant == "int8":
+        q, scales, slots = _quantize_plan(w2, counts, indices, block)
+        p.tiles = jnp.asarray(q)
+        p.scales = jnp.asarray(scales)
+        p.slots = jnp.asarray(slots)
+    return p
 
 
 def pack_expert_projection(w, block: int = 128, group: bool = True,
-                           ragged: bool = False
+                           ragged: bool = False, quant: str = "none"
                            ) -> Optional[PackedExpertProjection]:
     """Per-expert block plans for an ``(E, K, ...)`` MoE weight. Each
     expert's 2-D fold is planned independently; index rows are padded to
     the max ``max_nnz`` across experts so the stack is rectangular —
-    exactly the layout the grouped kernel's scalar prefetch consumes."""
+    exactly the layout the grouped kernel's scalar prefetch consumes.
+    ``quant="int8"`` concatenates every expert's kept tiles into one
+    int8 array with absolute slot rows, so the grouped/ragged kernels
+    stream tile storage instead of the dense weight stack."""
     wh = np.asarray(w)
     E = wh.shape[0]
     w2 = wh.reshape(E, wh.shape[1], -1)
@@ -106,19 +158,71 @@ def pack_expert_projection(w, block: int = 128, group: bool = True,
         densities.append(float(bm.mean()))
     from repro.kernels.grouped_block_sparse.ops import stack_expert_plans
     counts, indices = stack_expert_plans(counts_e, indices_e)
-    return PackedExpertProjection(
+    p = PackedExpertProjection(
         counts=jnp.asarray(counts), indices=jnp.asarray(indices),
         block=block, density=float(np.mean(densities)),
-        densities=tuple(densities), group=group, ragged=ragged)
+        densities=tuple(densities), group=group, ragged=ragged,
+        quant=quant)
+    if quant == "int8":
+        tiles_e, scales_e, slots_e = [], [], []
+        off = 0
+        for e in range(E):
+            q, scales, slots = _quantize_plan(w2[e], counts[e], indices[e],
+                                              block)
+            tiles_e.append(q)
+            scales_e.append(scales)
+            slots_e.append(slots + off)
+            off += q.shape[0]
+        p.tiles = jnp.asarray(np.concatenate(tiles_e))
+        p.scales = jnp.asarray(np.stack(scales_e))
+        p.slots = jnp.asarray(np.stack(slots_e))
+    return p
+
+
+def quant_plan_bytes(packed: dict, params=None, cfg=None) -> dict:
+    """Real storage accounting for the int8 kept-tile plans: per
+    projection, the int8 tile bytes + f32 scale-map bytes + int32 plan
+    bytes, next to the projection's dense bytes and a bf16 dense
+    reference — the ``bytes_after`` evidence the pack report and
+    baseline gates consume."""
+    per: dict = {}
+    dense_lookup = {}
+    if params is not None and cfg is not None:
+        c = cfg if not cfg.scan_layers else cfg.unrolled()
+        for proj in projections(c):
+            dense_lookup[proj.key] = tree_get(params, proj.path)
+    for key, p in packed.items():
+        if getattr(p, "quant", "none") != "int8" or p.tiles is None:
+            continue
+        tile_bytes = int(p.tiles.size)                       # int8
+        scale_bytes = int(p.scales.size) * 4
+        plan_bytes = (int(p.counts.size) + int(p.indices.size)
+                      + int(p.slots.size)) * 4
+        row = {"tile_bytes": tile_bytes, "scale_bytes": scale_bytes,
+               "plan_bytes": plan_bytes,
+               "bytes": tile_bytes + scale_bytes + plan_bytes}
+        w = dense_lookup.get(key)
+        if w is not None:
+            row["dense_bytes"] = int(w.size) * w.dtype.itemsize
+            row["bf16_bytes"] = int(w.size) * 2
+        per[f"{key[0]}:{key[1]}"] = row
+    total = sum(r["bytes"] for r in per.values())
+    dense = sum(r.get("dense_bytes", 0) for r in per.values())
+    bf16 = sum(r.get("bf16_bytes", 0) for r in per.values())
+    return {"per_projection": per, "total_bytes": total,
+            "dense_bytes": dense, "bf16_bytes": bf16,
+            "ratio_vs_bf16": (total / bf16 if bf16 else 0.0)}
 
 
 def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
                            group_experts: bool = True,
-                           ragged_moe: bool = False) -> tuple:
+                           ragged_moe: bool = False,
+                           quant: str = "none") -> tuple:
     """Returns ``(packed, report)``: ``{(layer, name): PackedProjection}``
     for every tileable projection, plus a summary of what was *not*
     packed (the silent-``None`` paths), so serve-time coverage is
-    auditable from the artifact report."""
+    auditable from the artifact report. ``quant="int8"`` packs kept-tile
+    int8 storage into every plan and reports its real byte counts."""
     cfg = cfg if not cfg.scan_layers else cfg.unrolled()
     packed: dict = {}
     skipped: list = []
@@ -128,9 +232,9 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
         n = int(np.prod(w.shape))
         if proj.expert_axis is not None:
             p = pack_expert_projection(w, block, group=group_experts,
-                                       ragged=ragged_moe)
+                                       ragged=ragged_moe, quant=quant)
         else:
-            p = pack_projection(w, block)
+            p = pack_projection(w, block, quant=quant)
         if p is None:
             skipped.append({"layer": proj.layer, "name": proj.name,
                             "params": n, "reason": "non-tileable"})
@@ -143,6 +247,7 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
         "block": block,
         "group_experts": group_experts,
         "ragged_moe": ragged_moe,
+        "quant": quant,
         "n_packed": len(packed),
         "n_expert_packed": n_expert,
         "packed_params": packed_params,
@@ -151,6 +256,8 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
         "skipped": skipped,
         "flop_savings": flop_savings(packed),
     }
+    if quant == "int8":
+        report["quant_bytes"] = quant_plan_bytes(packed, params, cfg)
     if skipped:
         logging.getLogger(__name__).info(
             "pack_model: skipped %d/%d projections (%d params) — %s",
@@ -161,19 +268,87 @@ def pack_model_with_report(params, cfg: ModelConfig, block: int = 128,
 
 
 def pack_model(params, cfg: ModelConfig, block: int = 128,
-               group_experts: bool = True, ragged_moe: bool = False) -> dict:
+               group_experts: bool = True, ragged_moe: bool = False,
+               quant: str = "none") -> dict:
     """{(layer, name): PackedProjection | PackedExpertProjection} for
     every tileable projection (MoE expert weights get per-expert plan
     stacks). Skipped (non-tileable) projections are logged; use
     :func:`pack_model_with_report` to get the summary programmatically."""
     packed, _ = pack_model_with_report(params, cfg, block,
                                        group_experts=group_experts,
-                                       ragged_moe=ragged_moe)
+                                       ragged_moe=ragged_moe, quant=quant)
     return packed
 
 
-def sparse_linear(x, w, packed: PackedProjection, interpret: bool = True):
-    """y = x @ w through the block-sparse kernel. x: (..., K); w: (K, N)."""
+def dequantized_weight(p: PackedProjection, K: int) -> np.ndarray:
+    """The fake-quant dense weight a quantized plan encodes: dequantised
+    kept tiles scattered into zeros, (K, N) f32. Running the unquantized
+    kernel (or a dense matmul) over this is the quantized kernels'
+    reference path — bitwise-identical because the scales are powers of
+    two."""
+    assert p.quant == "int8" and p.tiles is not None
+    b = p.block
+    counts = np.asarray(p.counts)
+    indices = np.asarray(p.indices)
+    slots = np.asarray(p.slots)
+    tiles = np.asarray(p.tiles, np.float32)
+    scales = np.asarray(p.scales)
+    w = np.zeros((K, counts.shape[0] * b), np.float32)
+    for n in range(counts.shape[0]):
+        for s in range(int(counts[n])):
+            k = int(indices[n, s])
+            w[k * b:(k + 1) * b, n * b:(n + 1) * b] = (
+                tiles[slots[n, s]] * scales[n, s])
+    return w
+
+
+def apply_fake_quant(params, cfg: ModelConfig, packed: dict):
+    """Replace every quantized projection's weight with its kept-tile
+    dequantised round-trip, so the dense forward, the evaluate stage,
+    and the unquantized-kernel reference path all see exactly the
+    weights the int8 kernels compute with. Non-kept tiles are all-zero
+    by construction of the plan, so scattering kept tiles into zeros
+    loses nothing."""
+    cfg = cfg if not cfg.scan_layers else cfg.unrolled()
+    for proj in projections(cfg):
+        p = packed.get(proj.key)
+        if p is None or getattr(p, "quant", "none") != "int8":
+            continue
+        w = tree_get(params, proj.path)
+        if isinstance(p, PackedExpertProjection):
+            K = w.shape[1]
+            wq = np.stack([dequantized_weight(p.expert(e), K)
+                           for e in range(p.n_experts)])
+        else:
+            K = w.shape[0]
+            wq = dequantized_weight(p, K)
+        params = tree_set(params, proj.path,
+                          jnp.asarray(wq.reshape(w.shape), w.dtype))
+    return params
+
+
+def _use_quant(plan, quant: Optional[str]) -> bool:
+    """Resolve the serve-time quant override against the plan: ``None``
+    follows the plan's own flag, ``"none"`` forces the dequantized
+    reference path, ``"int8"`` requires kept-tile storage."""
+    if quant is None:
+        return getattr(plan, "quant", "none") == "int8" \
+            and plan.tiles is not None
+    if quant == "int8":
+        if getattr(plan, "quant", "none") != "int8" or plan.tiles is None:
+            raise ValueError(
+                "quant='int8' requested but the plan carries no int8 "
+                "kept-tile storage (pack with PruneRecipe.quant='int8')")
+        return True
+    return False
+
+
+def sparse_linear(x, w, packed: PackedProjection, interpret: bool = True,
+                  quant: Optional[str] = None):
+    """y = x @ w through the block-sparse kernel. x: (..., K); w: (K, N).
+    Quantized plans stream their int8 kept tiles instead of ``w``
+    (``quant`` overrides the plan flag: "none" forces the dense-weight
+    reference path)."""
     lead = x.shape[:-1]
     K = x.shape[-1]
     x2 = x.reshape(-1, K)
@@ -182,16 +357,23 @@ def sparse_linear(x, w, packed: PackedProjection, interpret: bool = True):
     pad_m = (-M) % bm
     if pad_m:
         x2 = jnp.pad(x2, ((0, pad_m), (0, 0)))
-    y = blocksparse_matmul(x2, w.reshape(K, -1), packed.counts,
-                           packed.indices, block_m=bm, block_k=bm,
-                           block_n=bm, interpret=interpret)
+    if _use_quant(packed, quant):
+        y = quant_blocksparse_matmul(x2, packed.tiles, packed.counts,
+                                     packed.indices, packed.slots,
+                                     packed.scales, block_m=bm, block_k=bm,
+                                     block_n=bm, interpret=interpret)
+    else:
+        y = blocksparse_matmul(x2, w.reshape(K, -1), packed.counts,
+                               packed.indices, block_m=bm, block_k=bm,
+                               block_n=bm, interpret=interpret)
     if pad_m:
         y = y[:M]
     return y.reshape(*lead, -1)
 
 
 def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
-                     layer: int, interpret: bool = True):
+                     layer: int, interpret: bool = True,
+                     quant: Optional[str] = None):
     """Feed-forward through the kernel (gate/up/down as available)."""
     from repro.models.layers import activation
     mlp = block_params["mlp"]
@@ -201,7 +383,8 @@ def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
         w = mlp[name].astype(dtype)
         key = (layer, name)
         if key in packed_layer:
-            return sparse_linear(inp, w, packed_layer[key], interpret)
+            return sparse_linear(inp, w, packed_layer[key], interpret,
+                                 quant=quant)
         return inp @ w
 
     up = lin("up", x)
@@ -213,7 +396,8 @@ def sparse_apply_mlp(block_params: dict, spec, x, packed_layer: dict,
 
 
 def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
-                          interpret: bool = True, row_live=None):
+                          interpret: bool = True, row_live=None,
+                          quant: Optional[str] = None):
     """y[e] = x[e] @ w[e] for all experts in ONE grouped kernel launch.
     xs: (E, M, K); ws: (E, K, ...) — trailing dims folded to N. Decode-
     sized slot batches keep the whole M panel resident per expert
@@ -222,7 +406,8 @@ def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
     occupancy — experts/M-blocks with no live row skip compute inside
     the launch (outputs for live rows are bitwise-unchanged)."""
     from repro.kernels.grouped_block_sparse.ops import (
-        PANEL_ROWS_MAX, grouped_blocksparse_matmul)
+        PANEL_ROWS_MAX, grouped_blocksparse_matmul,
+        quant_grouped_blocksparse_matmul)
     E, M, K = xs.shape
     bm = packed.block
     # sublane alignment for the resident panel (16 covers bf16's
@@ -234,10 +419,17 @@ def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
         if row_live is not None:
             row_live = jnp.pad(row_live, ((0, 0), (0, pad_m)))
     block_m = None if M <= PANEL_ROWS_MAX else bm
-    y = grouped_blocksparse_matmul(xs, ws.reshape(E, K, -1), packed.counts,
-                                   packed.indices, block_m=block_m,
-                                   block_k=bm, block_n=bm,
-                                   interpret=interpret, row_live=row_live)
+    if _use_quant(packed, quant):
+        y = quant_grouped_blocksparse_matmul(
+            xs, packed.tiles, packed.counts, packed.indices, packed.slots,
+            packed.scales, block_m=block_m, block_k=bm, block_n=bm,
+            interpret=interpret, row_live=row_live)
+    else:
+        y = grouped_blocksparse_matmul(xs, ws.reshape(E, K, -1),
+                                       packed.counts, packed.indices,
+                                       block_m=block_m, block_k=bm,
+                                       block_n=bm, interpret=interpret,
+                                       row_live=row_live)
     if pad_m:
         y = y[:, :M]
     return y
@@ -245,7 +437,8 @@ def grouped_sparse_linear(xs, ws, packed: PackedExpertProjection,
 
 def ragged_sparse_linear(xp, ws, tile_expert,
                          packed: PackedExpertProjection,
-                         interpret: bool = True):
+                         interpret: bool = True,
+                         quant: Optional[str] = None):
     """The ragged expert batch through the stacked tile plan in one
     launch. xp: (M, K) routed tokens packed into tile-aligned per-expert
     segments (M is already a multiple of the ragged tile height — the
@@ -253,11 +446,17 @@ def ragged_sparse_linear(xp, ws, tile_expert,
     dims folded to N; tile_expert: (M / RAGGED_BLOCK_ROWS,) owner map,
     -1 on dead padding tiles (skipped inside the kernel)."""
     from repro.kernels.grouped_block_sparse.ops import (
-        RAGGED_BLOCK_ROWS, ragged_blocksparse_matmul)
+        RAGGED_BLOCK_ROWS, quant_ragged_blocksparse_matmul,
+        ragged_blocksparse_matmul)
     M, K = xp.shape
     E = ws.shape[0]
     bm = packed.block
     assert M % RAGGED_BLOCK_ROWS == 0
+    if _use_quant(packed, quant):
+        return quant_ragged_blocksparse_matmul(
+            xp, packed.tiles, packed.counts, packed.indices, packed.slots,
+            packed.scales, tile_expert, block_m=RAGGED_BLOCK_ROWS,
+            block_k=bm, block_n=bm, interpret=interpret)
     return ragged_blocksparse_matmul(xp, ws.reshape(E, K, -1),
                                      packed.counts, packed.indices,
                                      tile_expert,
@@ -277,7 +476,8 @@ RAGGED_TOKENS_MAX = 64
 def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
                      layer: int, interpret: bool = True,
                      group_experts: Optional[bool] = None,
-                     ragged_moe: Optional[bool] = None):
+                     ragged_moe: Optional[bool] = None,
+                     quant: Optional[str] = None):
     """MoE feed-forward with the expert matmuls run through the
     block-sparse kernels under the layer's per-expert plan stacks.
     Routing, dispatch, and combine are ``moe.apply_moe``'s own (shared
@@ -316,7 +516,7 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
             plan = packed_layer.get((layer, name))
             if isinstance(plan, PackedExpertProjection):
                 return ragged_sparse_linear(xp, ws, tile_expert, plan,
-                                            interpret)
+                                            interpret, quant=quant)
             # no plan for this projection: per-row expert gather oracle
             from repro.kernels.grouped_block_sparse.ops import \
                 RAGGED_BLOCK_ROWS
@@ -333,7 +533,8 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
             plan = packed_layer.get((layer, name))
             if isinstance(plan, PackedExpertProjection):
                 return grouped_sparse_linear(xs, ws, plan, interpret,
-                                             row_live=row_live)
+                                             row_live=row_live,
+                                             quant=quant)
             return jnp.einsum("emk,ekn->emn", xs, ws)
 
         y, _ = apply_moe(block_params["moe"], spec, x,
@@ -343,7 +544,8 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
     def expert_linear(name, e, xe, we):
         plan = packed_layer.get((layer, name))
         if isinstance(plan, PackedExpertProjection):
-            return sparse_linear(xe, we, plan.expert(e), interpret)
+            return sparse_linear(xe, we, plan.expert(e), interpret,
+                                 quant=quant)
         return xe @ we
 
     y, _ = apply_moe(block_params["moe"], spec, x,
@@ -354,18 +556,23 @@ def sparse_apply_moe(block_params: dict, spec, x, packed_layer: dict,
 def sparse_apply_ffn(block_params: dict, spec, x, packed: dict,
                      layer: int, interpret: bool = True,
                      group_experts: Optional[bool] = None,
-                     ragged_moe: Optional[bool] = None):
+                     ragged_moe: Optional[bool] = None,
+                     quant: Optional[str] = None):
     """Feed-forward dispatch for the serving ``mlp_apply`` hook: dense-MLP
     layers go through :func:`sparse_apply_mlp`, MoE layers through
     :func:`sparse_apply_moe` (grouped one-launch expert plans by
     default, per-expert launches with ``group_experts=False``, ragged
-    decode dispatch with ``ragged_moe``)."""
+    decode dispatch with ``ragged_moe``). ``quant`` picks the weight
+    storage the kernels stream: None follows each plan's own flag,
+    "int8" requires kept-tile storage, "none" forces the dense-weight
+    (dequantized reference) path."""
     from repro.models.specs import MoESpec
     if isinstance(spec, MoESpec):
         return sparse_apply_moe(block_params, spec, x, packed, layer,
                                 interpret, group_experts=group_experts,
-                                ragged_moe=ragged_moe)
-    return sparse_apply_mlp(block_params, spec, x, packed, layer, interpret)
+                                ragged_moe=ragged_moe, quant=quant)
+    return sparse_apply_mlp(block_params, spec, x, packed, layer, interpret,
+                            quant=quant)
 
 
 def flop_savings(packed: dict) -> float:
@@ -405,6 +612,11 @@ def plans_to_host(packed: dict) -> tuple:
             meta[key]["densities"] = list(p.densities)
             meta[key]["group"] = bool(p.group)
             meta[key]["ragged"] = bool(p.ragged)
+        if getattr(p, "quant", "none") == "int8" and p.tiles is not None:
+            meta[key]["quant"] = p.quant
+            arrays[key + ":tiles"] = np.asarray(jax.device_get(p.tiles))
+            arrays[key + ":scales"] = np.asarray(jax.device_get(p.scales))
+            arrays[key + ":slots"] = np.asarray(jax.device_get(p.slots))
     return arrays, meta
 
 
@@ -416,15 +628,21 @@ def plans_from_host(arrays: dict, meta: dict) -> dict:
         layer, name = key.split(":")
         counts = jnp.asarray(arrays[key + ":counts"])
         indices = jnp.asarray(arrays[key + ":indices"])
+        quant_kw: dict = {"quant": str(m.get("quant", "none"))}
+        if quant_kw["quant"] == "int8":
+            quant_kw["tiles"] = jnp.asarray(arrays[key + ":tiles"])
+            quant_kw["scales"] = jnp.asarray(arrays[key + ":scales"])
+            quant_kw["slots"] = jnp.asarray(arrays[key + ":slots"])
         if m.get("expert"):
             packed[(int(layer), name)] = PackedExpertProjection(
                 counts=counts, indices=indices, block=int(m["block"]),
                 density=float(m["density"]),
                 densities=tuple(float(d) for d in m["densities"]),
                 group=bool(m.get("group", True)),
-                ragged=bool(m.get("ragged", False)))
+                ragged=bool(m.get("ragged", False)), **quant_kw)
         else:
             packed[(int(layer), name)] = PackedProjection(
                 counts=counts, indices=indices,
-                block=int(m["block"]), density=float(m["density"]))
+                block=int(m["block"]), density=float(m["density"]),
+                **quant_kw)
     return packed

@@ -1,17 +1,21 @@
 """docs/ ↔ code sync: the recipe schema reference must name every
-dataclass field and every registered plug-in, and the serving guide
+dataclass field and every registered plug-in, the serving guide
 must name every ServeConfig field, every gateway wire field, and every
-registered scheduler policy, so the docs cannot rot as
-fields/selectors/categories/stages are added; README + docs internal
-links must resolve."""
+registered scheduler policy, the quantization guide must name every
+quant mode and knob, and the benchmarks guide must name every baseline
+gate and entry point — so the docs cannot rot as
+fields/selectors/categories/stages/gates are added; README + docs
+internal links must resolve."""
 import dataclasses
+import json
 import os
 import re
 
 import pytest
 
 from repro.core import pipeline  # noqa: F401 (registers stages)
-from repro.core.recipe import GRANULARITIES, CalibrationSpec, PruneRecipe
+from repro.core.recipe import (GRANULARITIES, QUANT_MODES, CalibrationSpec,
+                               PruneRecipe)
 from repro.core.registry import CATEGORIES, SELECTORS, STAGES
 from repro.core.sweep import GridSpec
 from repro.serve.config import ServeConfig
@@ -21,6 +25,8 @@ from repro.serve.policies import SCHEDULERS
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SCHEMA_DOC = os.path.join(REPO, "docs", "recipe-schema.md")
 SERVING_DOC = os.path.join(REPO, "docs", "serving.md")
+QUANT_DOC = os.path.join(REPO, "docs", "quantization.md")
+BENCH_DOC = os.path.join(REPO, "docs", "benchmarks.md")
 
 
 @pytest.fixture(scope="module")
@@ -104,6 +110,68 @@ def test_doc_names_no_stale_registry_entries(schema_text):
              | {"cloud", "edge", "mobile"})      # PLATFORMS presets
     stale = {s for s in documented - known if "." not in s}
     assert not stale, f"stale names documented: {sorted(stale)}"
+
+
+# ------------------------------------------------- quantization.md sync
+
+@pytest.fixture(scope="module")
+def quant_text():
+    assert os.path.exists(QUANT_DOC), "docs/quantization.md is missing"
+    with open(QUANT_DOC) as f:
+        return f.read()
+
+
+def test_quant_doc_covers_modes_and_knobs(quant_text):
+    """Every QUANT_MODES value and every quant knob — the recipe field,
+    the serve field, and the CLI flag — must appear in the quantization
+    guide as inline code."""
+    codes = _codes(quant_text)
+    missing = [v for v in QUANT_MODES
+               if v not in codes and f'"{v}"' not in quant_text]
+    assert not missing, f"quant modes missing from docs: {missing}"
+    for knob in ("quant", "PruneRecipe.quant", "ServeConfig.quant",
+                 "--quant", "quantize_tiles", "quant_bytes"):
+        assert any(knob in c for c in codes), \
+            f"{knob!r} missing from docs/quantization.md"
+
+
+def test_quant_fields_exist_in_dataclasses():
+    """The knobs the doc describes are real fields with QUANT_MODES
+    semantics."""
+    assert "quant" in {f.name for f in dataclasses.fields(PruneRecipe)}
+    assert "quant" in {f.name for f in dataclasses.fields(ServeConfig)}
+    assert "quant" in {f.name for f in dataclasses.fields(GridSpec)}
+    assert PruneRecipe(arch="llama3-8b", p=0.5).quant in QUANT_MODES
+
+
+# --------------------------------------------------- benchmarks.md sync
+
+@pytest.fixture(scope="module")
+def bench_text():
+    assert os.path.exists(BENCH_DOC), "docs/benchmarks.md is missing"
+    with open(BENCH_DOC) as f:
+        return f.read()
+
+
+def test_every_baseline_gate_documented(bench_text):
+    """Every metric key gated in benchmarks/baseline.json must be named
+    in docs/benchmarks.md — gates cannot be added silently."""
+    with open(os.path.join(REPO, "benchmarks", "baseline.json")) as f:
+        baseline = json.load(f)
+    codes = _codes(bench_text)
+    missing = [k for k in baseline["metrics"] if k not in codes]
+    assert not missing, \
+        f"baseline.json gates missing from docs/benchmarks.md: {missing}"
+
+
+def test_every_benchmark_entry_point_documented(bench_text):
+    """Every benchmarks/*.py module must be named in the guide."""
+    codes = _codes(bench_text)
+    mods = [n for n in sorted(os.listdir(os.path.join(REPO, "benchmarks")))
+            if n.endswith(".py") and not n.startswith("_")]
+    missing = [m for m in mods if m not in codes]
+    assert not missing, \
+        f"benchmark modules missing from docs/benchmarks.md: {missing}"
 
 
 # ------------------------------------------------------------ doc links

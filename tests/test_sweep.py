@@ -214,6 +214,27 @@ def test_sweep_profiles_once_and_reports(model, tmp_path, monkeypatch):
     assert os.path.exists(res.md_path)
 
 
+def test_sweep_quant_axis(model, tmp_path):
+    """The quant grid axis: points fan out over precision, every row
+    carries a quant column, and int8 points report real (smaller)
+    bytes_after than their unquantized twin."""
+    cfg, params = model
+    out = str(tmp_path / "sweep-quant")
+    grid = GridSpec(quant=("none", "int8"))
+    base = base_recipe(cfg, category="unstructured")
+    assert {r.quant for r in grid.points(base)} == {"none", "int8"}
+    labels = [point_label(r) for r in grid.points(base)]
+    assert len(set(labels)) == 2                # int8 visible in the label
+    res = run_sweep(base, grid, params, cfg, out_dir=out,
+                    calibration=_calib(cfg))
+    by_quant = {r["quant"]: r for r in res.rows}
+    assert set(by_quant) == {"none", "int8"}
+    assert by_quant["int8"]["bytes_after"] < by_quant["none"]["bytes_after"]
+    with open(res.csv_path) as f:
+        rows = list(csv.DictReader(f))
+    assert {r["quant"] for r in rows} == {"none", "int8"}
+
+
 def test_sweep_reuses_saved_profile_without_profiling(model, tmp_path,
                                                       monkeypatch):
     cfg, params = model
